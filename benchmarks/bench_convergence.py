@@ -1,0 +1,57 @@
+"""Figure 1 / Figure 3 reproduction: DIANA (momentum 0.95) vs QSGD, TernGrad,
+DQGD and uncompressed SGD on regularized logistic regression.
+
+Paper claim validated: DIANA reaches a (much) lower objective gap than the
+memory-less compressors at equal step budget, approaching uncompressed SGD.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .common import fstar_logreg, run_logreg
+
+STEPS = 800
+GAMMA = 1.0
+BLOCK = 28   # ~paper's optimal l2 bucket (~25) rounded to a multiple of 4
+
+
+def run():
+    fstar = fstar_logreg()
+    rows = []
+    settings = [
+        ("sgd_fp32", "none", 2.0, 0.0),
+        ("diana_linf_m095", "diana", math.inf, 0.95),
+        ("diana_l2", "diana", 2.0, 0.0),
+        ("qsgd_l2", "qsgd", 2.0, 0.0),
+        ("terngrad_linf", "terngrad", math.inf, 0.0),
+        ("dqgd_l2", "dqgd", 2.0, 0.0),
+    ]
+    gaps = {}
+    for name, method, p, beta in settings:
+        res = run_logreg(method, p, steps=STEPS, gamma=GAMMA if beta == 0 else GAMMA * (1 - beta),
+                         block=BLOCK, beta=beta)
+        gap = max(res["final_loss"] - fstar, 1e-12)
+        gaps[name] = gap
+        rows.append({
+            "name": f"fig1_convergence/{name}",
+            "us_per_call": round(res["us_per_step"], 1),
+            "derived": f"gap={gap:.3e}",
+        })
+    # headline check rows
+    rows.append({
+        "name": "fig1_convergence/CLAIM_diana_beats_qsgd",
+        "us_per_call": 0.0,
+        "derived": str(gaps["diana_l2"] < gaps["qsgd_l2"]),
+    })
+    rows.append({
+        "name": "fig1_convergence/CLAIM_diana_beats_terngrad",
+        "us_per_call": 0.0,
+        "derived": str(gaps["diana_linf_m095"] < gaps["terngrad_linf"]),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

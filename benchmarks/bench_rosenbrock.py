@@ -1,0 +1,64 @@
+"""Section M.1 reproduction: DIANA vs QSGD vs TernGrad on the distributed
+Rosenbrock decomposition (2 workers, deterministic gradients, 1-bit regime).
+
+Paper claim: DIANA vastly outperforms the memory-less methods.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.diana_paper import ROSENBROCK
+from repro.core import CompressionConfig, reference_init, reference_step
+
+
+def run():
+    f1, f2 = ROSENBROCK["f1"], ROSENBROCK["f2"]
+    opt = jnp.asarray(ROSENBROCK["optimum"])
+
+    g1 = jax.grad(lambda v: f1(v[0], v[1]))
+    g2 = jax.grad(lambda v: f2(v[0], v[1]))
+
+    rows, finals = [], {}
+    for method, p, beta, gamma in (
+        ("diana", math.inf, 0.9, 2e-3),
+        ("qsgd", 2.0, 0.0, 2e-3),
+        ("terngrad", math.inf, 0.0, 2e-3),
+        ("none", 2.0, 0.9, 2e-3),
+    ):
+        cfg = CompressionConfig(method=method, p=p, block_size=4, alpha=0.5 if method == "diana" else None)
+        params = {"v": jnp.asarray([-0.5, 0.5])}
+        # pad to 4 dims for packing alignment (extra coords have zero gradient)
+        params = {"v": jnp.concatenate([params["v"], jnp.zeros(2)])}
+        state = reference_init(params, cfg, 2)
+        key = jax.random.PRNGKey(0)
+        for k in range(4000):
+            key = jax.random.fold_in(key, k)
+            v2 = params["v"][:2]
+            grads = jnp.stack([
+                jnp.concatenate([g1(v2), jnp.zeros(2)]),
+                jnp.concatenate([g2(v2), jnp.zeros(2)]),
+            ])
+            v, state = reference_step({"v": grads}, state, key, cfg, beta=beta)
+            params = {"v": params["v"] - gamma * v["v"]}
+        dist = float(jnp.linalg.norm(params["v"][:2] - opt))
+        finals[method] = dist
+        rows.append({
+            "name": f"rosenbrock/{method}",
+            "us_per_call": 0.0,
+            "derived": f"dist_to_opt={dist:.4f}",
+        })
+    rows.append({
+        "name": "rosenbrock/CLAIM_diana_beats_memoryless",
+        "us_per_call": 0.0,
+        "derived": str(finals["diana"] < finals["qsgd"] and finals["diana"] < finals["terngrad"]),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

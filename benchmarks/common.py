@@ -1,0 +1,84 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Each ``bench_*`` module exposes ``run() -> list[dict]`` with at least
+``name``, ``us_per_call`` (wall-clock of the measured inner op, microseconds)
+and ``derived`` (the paper-relevant quantity).  ``benchmarks.run`` aggregates
+everything into the required ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressionConfig, reference_init, reference_step
+
+
+def timed(fn: Callable, *args, reps: int = 3) -> float:
+    """Median wall time of fn(*args) in microseconds (post-warmup)."""
+    fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+            out, (jax.Array, tuple, list, dict)
+        ) else None
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def run_logreg(method: str, p: float, *, steps: int, gamma: float, block: int,
+               beta: float = 0.0, alpha=None, l1=0.0, n_workers: int = 10,
+               seed: int = 0, problem=None):
+    """Distributed (reference-simulated) regularized logistic regression.
+
+    Returns dict with loss trajectory, final distance to x*, sparsity stats.
+    """
+    from repro.configs.diana_paper import LogRegProblem
+    from repro.core.prox import l1 as l1_reg, none as no_reg
+    from repro.data import logreg_data
+
+    prob = problem or LogRegProblem(n_workers=n_workers, seed=seed)
+    X, y = logreg_data(prob)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    l2 = prob.l2
+    reg = l1_reg(l1) if l1 > 0 else no_reg()
+
+    def worker_grads(w):
+        z = y * jnp.einsum("wij,j->wi", X, w)
+        sig = jax.nn.sigmoid(-z)
+        return -jnp.einsum("wij,wi->wj", X, y * sig) / X.shape[1] + l2 * w
+
+    def full_loss(w):
+        z = y * jnp.einsum("wij,j->wi", X, w)
+        return float(jnp.mean(jnp.log1p(jnp.exp(-z))) + 0.5 * l2 * w @ w
+                     + reg.tree_value({"w": w}))
+
+    cfg = CompressionConfig(method=method, p=p, block_size=block, alpha=alpha)
+    params = {"x": jnp.zeros((prob.dim,))}
+    state = reference_init(params, cfg, prob.n_workers)
+    key = jax.random.PRNGKey(seed)
+    losses = []
+    t0 = time.perf_counter()
+    for k in range(steps):
+        key = jax.random.fold_in(key, k)
+        g = {"x": worker_grads(params["x"])}
+        v, state = reference_step(g, state, key, cfg, beta=beta)
+        params = reg.tree_prox({"x": params["x"] - gamma * v["x"]}, gamma)
+        if k % max(1, steps // 50) == 0 or k == steps - 1:
+            losses.append((k, full_loss(params["x"])))
+    wall = (time.perf_counter() - t0) / steps * 1e6
+    return {"losses": losses, "final_loss": losses[-1][1], "x": params["x"],
+            "us_per_step": wall, "cfg": cfg}
+
+
+def fstar_logreg(problem=None, steps: int = 4000, l1: float = 0.0):
+    """High-accuracy reference optimum via uncompressed full-gradient descent."""
+    res = run_logreg("none", 2.0, steps=steps, gamma=2.0, block=64, l1=l1, problem=problem)
+    return res["final_loss"]

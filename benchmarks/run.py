@@ -1,0 +1,67 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints the required ``name,us_per_call,derived`` CSV.  Modules:
+
+  bench_convergence     Fig. 1 / Fig. 3   DIANA vs QSGD/TernGrad/DQGD/SGD
+  bench_norm_power      Tab. 3 / Cor. 1   iteration complexity vs p
+  bench_blocksize       Tab. 4 / Fig. 5   optimal bucket sizes per norm
+  bench_comm            Fig. 2 / 6 / 8    bytes on the wire, crossover n
+  bench_sparsity        Fig. 13 / Thm. 1  transmitted-vector sparsity
+  bench_variance        Lem. 2            quantization variance + kernel time
+  bench_rosenbrock      Sec. M.1          nonconvex toy comparison
+  bench_decreasing_step Thm. 3 / Cor. 2   O(1/k) with noise
+  roofline              deliverable (g)   3-term roofline from dry-run artifacts
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only <module substring>]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_convergence",
+    "bench_norm_power",
+    "bench_blocksize",
+    "bench_comm",
+    "bench_sparsity",
+    "bench_variance",
+    "bench_rosenbrock",
+    "bench_decreasing_step",
+    "roofline",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on module name")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run()
+        except Exception as e:
+            failures.append(name)
+            print(f"{name}/ERROR,0,\"{type(e).__name__}: {str(e)[:120]}\"")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        for r in rows:
+            derived = str(r["derived"]).replace(",", ";")
+            print(f"{r['name']},{r['us_per_call']},\"{derived}\"")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILED modules: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's convex experiment: l1-regularized logistic regression with
+DIANA + proximal steps — the setting where QSGD/TernGrad provably fail
+(their quantization noise never vanishes, so the prox iterates oscillate).
+
+Prints the objective trajectory for DIANA vs QSGD and the sparsity of the
+DIANA solution (the l1 prox actually zeroes coordinates because DIANA's
+direction converges).
+
+Run:  PYTHONPATH=src python examples/logreg_prox.py
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.diana_paper import LogRegProblem
+from repro.core import CompressionConfig, reference_init, reference_step
+from repro.core.prox import l1
+from repro.data import logreg_data
+
+
+def main():
+    prob = LogRegProblem(n_workers=10)
+    Xs, ys = logreg_data(prob)
+    X, y = jnp.asarray(Xs), jnp.asarray(ys)
+    reg = l1(prob.l1)
+    gamma, steps = 1.0, 600
+
+    def worker_grads(w):
+        z = y * jnp.einsum("wij,j->wi", X, w)
+        sig = jax.nn.sigmoid(-z)
+        return -jnp.einsum("wij,wi->wj", X, y * sig) / X.shape[1] + prob.l2 * w
+
+    def objective(w):
+        z = y * jnp.einsum("wij,j->wi", X, w)
+        return float(jnp.mean(jnp.log1p(jnp.exp(-z)))
+                     + 0.5 * prob.l2 * w @ w + prob.l1 * jnp.abs(w).sum())
+
+    for method, p in (("diana", math.inf), ("qsgd", 2.0)):
+        cfg = CompressionConfig(method=method, p=p, block_size=28)
+        params = {"x": jnp.zeros((prob.dim,))}
+        state = reference_init(params, cfg, prob.n_workers)
+        key = jax.random.PRNGKey(0)
+        for k in range(steps):
+            key = jax.random.fold_in(key, k)
+            v, state = reference_step({"x": worker_grads(params["x"])}, state, key, cfg)
+            params = reg.tree_prox({"x": params["x"] - gamma * v["x"]}, gamma)
+            if k % 100 == 0:
+                print(f"{method:8s} step {k:4d}  obj {objective(params['x']):.6f}")
+        nnz = int((jnp.abs(params["x"]) > 1e-8).sum())
+        print(f"{method:8s} final obj {objective(params['x']):.6f}  "
+              f"nnz {nnz}/{prob.dim}\n")
+
+
+if __name__ == "__main__":
+    main()

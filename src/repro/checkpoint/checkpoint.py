@@ -1,0 +1,108 @@
+"""Checkpointing: pytree <-> .npz with a JSON manifest (no orbax dependency).
+
+Handles bf16 leaves via ml_dtypes (a JAX dependency), preserves tree structure
+through key-path flattening, and round-trips DianaOptState / model params /
+caches alike.  Writes are atomic (tmp + rename) — a crashed save never
+corrupts the previous checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_MANIFEST = "manifest.json"
+
+# dtypes numpy cannot natively save/cast — stored as bit-equal uint views
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    dtypes: Dict[str, str] = {}
+    stored: Dict[str, np.ndarray] = {}
+    for k, v in flat.items():
+        name = str(v.dtype)
+        dtypes[k] = name
+        if name in _EXOTIC:
+            stored[k] = v.view(_EXOTIC[name][1])
+        else:
+            stored[k] = v
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **stored)
+    os.replace(tmp, path)
+    manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes,
+                "file": os.path.basename(path)}
+    mtmp = path + ".manifest.tmp"
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(mtmp, os.path.join(directory, _MANIFEST))
+    return path
+
+
+def restore_checkpoint(directory: str, template, step: int | None = None):
+    """Restore into the structure of ``template`` (dtypes/shapes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        dtypes = json.load(f).get("dtypes", {})
+    data = np.load(path, allow_pickle=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kpath, leaf in flat:
+        key = "/".join(_path_str(p) for p in kpath)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        saved_dtype = dtypes.get(key, str(arr.dtype))
+        if saved_dtype in _EXOTIC:
+            arr = arr.view(_EXOTIC[saved_dtype][0])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def latest_step(directory: str) -> int | None:
+    mpath = os.path.join(directory, _MANIFEST)
+    if not os.path.exists(mpath):
+        return None
+    with open(mpath) as f:
+        return int(json.load(f)["step"])

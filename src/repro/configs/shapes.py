@@ -1,0 +1,76 @@
+"""The four assigned input shapes + ShapeDtypeStruct input specs for dry-runs.
+
+Decode shapes lower ``serve_step`` (ONE new token against a KV/SSM cache of
+``seq_len``); train/prefill shapes lower ``train_step`` / prefill forward.
+``long_500k`` engages each architecture's sub-quadratic path: native for
+SSM/hybrid, sliding-window (cfg.sliding_window) for attention archs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeConfig
+
+__all__ = ["SHAPES", "get_shape", "input_specs", "shape_applicable"]
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": ShapeConfig("long_500k", seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(applicable, reason). long_500k needs a sub-quadratic path."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, (
+            f"{cfg.name} is pure full-attention with no sliding_window configured; "
+            "long_500k requires a sub-quadratic variant (DESIGN.md §Arch-applicability)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train/prefill: full (B, S) token batch — frontend models receive their
+    stub embeddings for a ``cfg.frontend_tokens`` prefix and tokens for the rest.
+    decode: one token per sequence (the cache is part of serve state, not input).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    s_tokens = s
+    if cfg.frontend == "vision":
+        from repro.models.transformer import FRONTEND_DIM
+
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, FRONTEND_DIM["vision"]), f32
+        )
+        s_tokens = s - cfg.frontend_tokens
+    elif cfg.frontend == "audio":
+        from repro.models.transformer import FRONTEND_DIM
+
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, FRONTEND_DIM["audio"]), f32
+        )
+        s_tokens = s - cfg.frontend_tokens
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s_tokens), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s_tokens), jnp.int32)
+    return specs

@@ -1,0 +1,33 @@
+"""Core DIANA library: quantization, packing, prox operators, compression policies."""
+
+from .quantization import (
+    QuantizedBlocks,
+    alpha_p,
+    lp_norm,
+    quantize_blocks,
+    dequantize_blocks,
+    quantize_pytree,
+    dequantize_pytree,
+    expected_sparsity,
+    quantization_variance,
+)
+from .packing import pack2bit, unpack2bit, packed_nbytes, PACK_FACTOR
+from .compression import CompressionConfig, compress_tree, decompress_tree, payload_bits_per_dim
+from .diana import (
+    DianaState,
+    init_state,
+    aggregate_shardmap,
+    reference_init,
+    reference_step,
+    tree_zeros_like,
+)
+from . import prox
+
+__all__ = [
+    "QuantizedBlocks", "alpha_p", "lp_norm", "quantize_blocks", "dequantize_blocks",
+    "quantize_pytree", "dequantize_pytree", "expected_sparsity", "quantization_variance",
+    "pack2bit", "unpack2bit", "packed_nbytes", "PACK_FACTOR",
+    "CompressionConfig", "compress_tree", "decompress_tree", "payload_bits_per_dim",
+    "DianaState", "init_state", "aggregate_shardmap", "reference_init", "reference_step",
+    "tree_zeros_like", "prox",
+]

@@ -1,0 +1,358 @@
+"""DIANA (Algorithm 1) — compressed gradient-difference aggregation.
+
+Two implementations, one semantics:
+
+* :func:`aggregate_shardmap` — the production path, called *inside* a
+  ``shard_map`` whose manual axes are the DIANA worker axes.  Each worker
+  quantizes its gradient difference, bit-packs it, all-gathers the packed
+  payload (the TPU analogue of the paper's MPI Gather + Broadcast — replicated
+  deterministic decode replaces the server), and every device reconstructs the
+  identical aggregated estimator ``ghat = h^k + mean_i dhat_i``.
+
+* :func:`reference_step` — a single-process n-worker simulation (vmapped
+  quantization) used by unit tests, the convex-experiment benchmarks and the
+  paper-figure reproductions.  ``aggregate_shardmap`` is tested to agree with
+  it bit-for-bit under a shared PRNG schedule.
+
+The memory update is Algorithm 1 line 6/9:
+    h_i^{k+1} = h_i^k + alpha * dhat_i^k
+    h^{k+1}   = h^k   + alpha * mean_i dhat_i^k
+and the returned direction is line 8: ``ghat^k = h^k + mean_i dhat_i^k``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .compression import CompressionConfig, compress_tree
+from .packing import unpack2bit
+from .quantization import QuantizedBlocks, dequantize_blocks, quantize_blocks
+
+__all__ = [
+    "DianaState",
+    "init_state",
+    "aggregate_shardmap",
+    "reference_init",
+    "reference_step",
+    "tree_zeros_like",
+]
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+class DianaState(NamedTuple):
+    """Compressor state carried by the training loop.
+
+    Memories are stored FLAT (one 1-D leaf per param leaf, sharded evenly over
+    the 'model' axis) — the same layout quantization blocks live in, so the
+    entire compress -> gather -> decode -> h-update path is layout-local; the
+    only relayouts per step are grads->flat and ghat->param-shape (both over
+    the fast intra-pod ICI; see DESIGN.md §Perf notes).
+
+    h_worker: pytree of (n_workers, d_leaf) f32/bf16 — axis 0 sharded over the
+              worker mesh axes (each worker holds only its own memory).
+    h_server: pytree of (d_leaf,) — replicated over worker axes — the paper's
+              server-side ``h^k = mean_i h_i^k``.
+    """
+
+    h_worker: Any
+    h_server: Any
+
+
+def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
+    """h_i^0 = 0 (the paper's experimental choice) for all methods."""
+    h_w = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((n_workers, p.size), cfg.h_dtype), params
+    )
+    h_s = jax.tree_util.tree_map(lambda p: jnp.zeros((p.size,), cfg.h_dtype), params)
+    return DianaState(h_worker=h_w, h_server=h_s)
+
+
+# ---------------------------------------------------------------------------
+# Distributed aggregation (inside shard_map over worker axes)
+# ---------------------------------------------------------------------------
+
+def _gathered_mean(payload, like, n_workers: int, axis_names):
+    """mean_i dequant(payload_i) without materialising n dense copies.
+
+    All-gathers the 2-bit packed payload (cheap: n * d/4 bytes) and then
+    decodes sequentially with a fori_loop accumulator so peak memory stays at
+    one dense gradient regardless of n.  The gathered buffers and the f32
+    accumulator are explicitly re-constrained to stay sharded over 'model' on
+    the block dim — ``all_gather`` output sharding does not propagate the auto
+    axes by itself and would otherwise replicate n * d/4 bytes per device.
+    """
+    from repro.models.sharding import shard
+
+    def gather(leaf):
+        g = {
+            "packed": jax.lax.all_gather(leaf["packed"], axis_names, tiled=False)
+            if axis_names else leaf["packed"][None],
+            "scales": jax.lax.all_gather(leaf["scales"], axis_names, tiled=False)
+            if axis_names else leaf["scales"][None],
+        }
+        g["packed"] = shard(g["packed"], None, "model", None)
+        g["scales"] = shard(g["scales"], None, "model")
+        return g
+
+    gathered = jax.tree_util.tree_map(
+        gather, payload, is_leaf=lambda t: isinstance(t, dict) and "packed" in t
+    )
+
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    pay_leaves = jax.tree_util.tree_leaves(
+        gathered, is_leaf=lambda t: isinstance(t, dict) and "packed" in t
+    )
+
+    outs = []
+    for pay, l in zip(pay_leaves, like_leaves):
+        packed, scales = pay["packed"], pay["scales"]           # (n, m, B/4), (n, m)
+        m, bs4 = packed.shape[-2], packed.shape[-1]
+        # statically-unrolled accumulation: dynamic-slice over the gathered
+        # worker dim trips the SPMD partitioner under multiple manual axes
+        # (RET_CHECK "Incompatible manual sharding"), and static slices also
+        # fuse better; n_workers is a mesh constant so the unroll is bounded.
+        acc = shard(jnp.zeros((m, bs4 * 4), jnp.float32), "model", None)
+        for i in range(n_workers):
+            signs = unpack2bit(packed[i]).astype(jnp.float32)   # (m, B)
+            acc = acc + signs * scales[i][:, None].astype(jnp.float32)
+        mean = (acc / n_workers).reshape(-1)[: l.size].reshape(l.shape)
+        outs.append(mean.astype(l.dtype))
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def _dequant_own(qtree, like):
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    q_leaves = jax.tree_util.tree_leaves(
+        qtree, is_leaf=lambda t: isinstance(t, QuantizedBlocks)
+    )
+    outs = [
+        dequantize_blocks(q, shape=l.shape, dtype=jnp.float32).astype(l.dtype)
+        for q, l in zip(q_leaves, like_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_workers):
+    """The core Algorithm-1 round on LOCAL arrays (no sharding decisions).
+
+    grads_local leaves may have any shape — they are flattened locally; the
+    h leaves are flat ``(1, d_local)`` / ``(d_local,)``.  ``axis_names`` are
+    the (manual) worker axes the packed payload is gathered over.
+    """
+    g_flat = jax.tree_util.tree_map(
+        lambda g: g.reshape(-1).astype(jnp.float32), grads_local
+    )
+    h_local = jax.tree_util.tree_map(lambda h: h[0], h_worker)
+
+    if cfg.uses_memory:
+        delta = jax.tree_util.tree_map(
+            lambda g, h: g - h.astype(jnp.float32), g_flat, h_local
+        )
+    else:  # qsgd / terngrad / dqgd quantize the gradient itself
+        delta = g_flat
+
+    payload, qtree = compress_tree(delta, key, cfg)
+    dhat_mean = _gathered_mean(payload, g_flat, n_workers, axis_names)
+
+    alpha = cfg.effective_alpha()
+    if cfg.uses_memory:
+        dhat_own = _dequant_own(qtree, g_flat)
+        new_h_local = jax.tree_util.tree_map(
+            lambda h, d: (h.astype(jnp.float32) + alpha * d).astype(cfg.h_dtype),
+            h_local, dhat_own,
+        )
+        new_h_server = jax.tree_util.tree_map(
+            lambda h, d: (h.astype(jnp.float32) + alpha * d).astype(cfg.h_dtype),
+            h_server, dhat_mean,
+        )
+        ghat_flat = jax.tree_util.tree_map(
+            lambda h, d: h.astype(jnp.float32) + d, h_server, dhat_mean
+        )
+        new_hw = jax.tree_util.tree_map(lambda h: h[None], new_h_local)
+    else:
+        ghat_flat = dhat_mean
+        new_hw, new_h_server = h_worker, h_server
+
+    ghat = jax.tree_util.tree_map(
+        lambda f, g: f.reshape(g.shape).astype(g.dtype), ghat_flat, grads_local
+    )
+    return ghat, new_hw, new_h_server
+
+
+def aggregate_shardmap(
+    grads_local,
+    state: DianaState,
+    key: jax.Array,
+    cfg: CompressionConfig,
+    *,
+    axis_names: Sequence[str],
+    n_workers: int,
+    inner_axes: Sequence[str] = (),
+    grad_specs=None,
+    h_specs=None,
+    mesh=None,
+):
+    """One DIANA aggregation round inside a shard_map body.
+
+    grads_local — this worker's local gradient pytree (g_i^k).
+    state.h_worker leaves arrive with local leading dim 1 (own memory only).
+    key          — already folded with the worker index (deterministic stream).
+
+    When ``inner_axes`` (the non-worker mesh axes, e.g. ('model',) or
+    ('data','model')) are given together with per-leaf PartitionSpecs, the
+    whole round runs inside a NESTED fully-manual shard_map: each inner
+    device quantizes / packs / decodes ITS OWN shard of every gradient leaf
+    and the packed all-gather runs over the (outer-manual) worker axes.  No
+    relayout, no partitioner decisions — XLA's SPMD partitioner crashes on
+    several of them under manual subgroups (DESIGN.md §6).  The h memory is
+    stored in this shard-local flat layout, which is self-consistent step to
+    step (its global ordering is internal state, never interpreted).
+
+    Returns ``(ghat, new_state)`` with ``ghat`` identical on all workers and
+    shaped/sharded like ``grads_local``.
+    """
+    axis_names = tuple(axis_names)
+    inner_axes = tuple(inner_axes)
+
+    if cfg.method == "none":
+        ghat = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axis_names) if axis_names else g, grads_local
+        )
+        return ghat, state
+
+    if not inner_axes or grad_specs is None:
+        # single-device / tests: everything already local
+        ghat, new_hw, new_hs = _aggregate_local(
+            grads_local, state.h_worker, state.h_server, key, cfg,
+            axis_names, n_workers,
+        )
+        return ghat, DianaState(h_worker=new_hw, h_server=new_hs)
+
+    from jax import shard_map as _shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.sharding import NoopPolicy, sharding_policy
+
+    amesh = None
+    try:
+        amesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        pass
+    if amesh is None or amesh.empty:
+        amesh = mesh  # plain-jit caller (no outer shard_map): concrete mesh
+    assert amesh is not None, "aggregate_shardmap needs a mesh for the nested map"
+
+    def body(grads, h_w, h_s, k):
+        with sharding_policy(NoopPolicy()):
+            return _aggregate_local(grads, h_w, h_s, k, cfg, axis_names, n_workers)
+
+    hw_specs = jax.tree_util.tree_map(lambda s: P(None, *s), h_specs)
+    in_specs = (grad_specs, hw_specs, h_specs, P())
+    out_specs = (grad_specs, hw_specs, h_specs)
+    ghat, new_hw, new_hs = _shard_map(
+        body, mesh=amesh, in_specs=in_specs, out_specs=out_specs,
+        axis_names=set(inner_axes), check_vma=False,
+    )(grads_local, state.h_worker, state.h_server, key)
+    return ghat, DianaState(h_worker=new_hw, h_server=new_hs)
+
+
+# ---------------------------------------------------------------------------
+# Single-process n-worker reference (tests, convex experiments, figures)
+# ---------------------------------------------------------------------------
+
+class ReferenceState(NamedTuple):
+    h_worker: Any  # (n, d) per leaf — flat, mirroring DianaState
+    h_server: Any  # (d,) per leaf — flat
+    v: Any         # momentum buffer, like params
+
+
+def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceState:
+    return ReferenceState(
+        h_worker=jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n_workers, p.size), jnp.float32), params
+        ),
+        h_server=jax.tree_util.tree_map(
+            lambda p: jnp.zeros((p.size,), jnp.float32), params
+        ),
+        v=tree_zeros_like(params, jnp.float32),
+    )
+
+
+def reference_step(
+    grads_per_worker,
+    state: ReferenceState,
+    key: jax.Array,
+    cfg: CompressionConfig,
+    *,
+    beta: float = 0.0,
+):
+    """Aggregate stacked per-worker grads (n, ...) exactly as Algorithm 1.
+
+    Bit-for-bit aligned with :func:`aggregate_shardmap`: worker ``i`` draws
+    from ``fold_in(key, i)`` through the same ``compress_tree`` path, and the
+    mean accumulates in the same sequential f32 order as the distributed
+    decode loop — tests assert exact equality between the two.
+
+    Returns (v, new_state): ``v = beta*v + ghat`` — caller does the prox step.
+    """
+    from .compression import compress_tree  # local import to avoid cycle
+
+    n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
+
+    if cfg.method == "none":
+        ghat = jax.tree_util.tree_map(lambda g: g.mean(0), grads_per_worker)
+        new_state = state
+    else:
+        alpha = cfg.effective_alpha()
+        acc = None
+        new_h_rows = []
+        for w in range(n):
+            gw = jax.tree_util.tree_map(
+                lambda g: g[w].astype(jnp.float32).reshape(-1), grads_per_worker
+            )
+            if cfg.uses_memory:
+                hw = jax.tree_util.tree_map(lambda h: h[w].astype(jnp.float32), state.h_worker)
+                delta = jax.tree_util.tree_map(lambda g, h: g - h, gw, hw)
+            else:
+                delta = gw
+            _, qtree = compress_tree(delta, jax.random.fold_in(key, w), cfg)
+            dhat_w = _dequant_own(qtree, gw)
+            acc = dhat_w if acc is None else jax.tree_util.tree_map(
+                lambda a, d: a + d, acc, dhat_w
+            )
+            if cfg.uses_memory:
+                new_h_rows.append(jax.tree_util.tree_map(
+                    lambda h, d: h + alpha * d, hw, dhat_w
+                ))
+        dhat_mean = jax.tree_util.tree_map(lambda a: a / n, acc)
+
+        if cfg.uses_memory:
+            ghat_flat = jax.tree_util.tree_map(
+                lambda h, d: h + d, state.h_server, dhat_mean
+            )
+            new_state = state._replace(
+                h_worker=jax.tree_util.tree_map(
+                    lambda *rows: jnp.stack(rows), *new_h_rows
+                ),
+                h_server=jax.tree_util.tree_map(
+                    lambda h, d: h + alpha * d, state.h_server, dhat_mean
+                ),
+            )
+        else:
+            ghat_flat = dhat_mean
+            new_state = state
+        ghat = jax.tree_util.tree_map(
+            lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
+        )
+
+    v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
+    return v, new_state._replace(v=v)

@@ -1,0 +1,50 @@
+"""2-bit packing of ternary sign tensors for compressed collectives.
+
+The paper communicates Elias-coded sparse vectors through MPI Gather; on TPU we
+use fixed-width 2-bit codes (4 ternary values per int8 byte) so payloads have
+static shapes, vectorize on 8-bit lanes, and can be moved by a single
+all-gather.  Encoding: sign s in {-1, 0, +1} -> (s + 1) in {0, 1, 2} packed
+little-endian within the byte.  Code 3 is unused.
+
+These are the pure-jnp reference implementations; the Pallas kernels in
+``repro.kernels`` fuse quantize+pack in one VMEM pass and are validated against
+these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pack2bit", "unpack2bit", "packed_nbytes", "PACK_FACTOR"]
+
+PACK_FACTOR = 4  # ternary values per byte
+
+
+def packed_nbytes(n: int) -> int:
+    """Bytes needed for ``n`` ternary values."""
+    return -(-n // PACK_FACTOR)
+
+
+def pack2bit(signs: jax.Array) -> jax.Array:
+    """Pack an int8 {-1,0,1} tensor (..., B) into (..., B/4) uint8.
+
+    Last dim must be a multiple of 4 (block sizes are; enforced statically).
+    """
+    if signs.shape[-1] % PACK_FACTOR:
+        raise ValueError(f"last dim {signs.shape[-1]} not a multiple of {PACK_FACTOR}")
+    codes = (signs + 1).astype(jnp.uint8)                       # {0,1,2}
+    g = codes.reshape(*codes.shape[:-1], -1, PACK_FACTOR)       # (..., B/4, 4)
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    return jnp.sum(g << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack2bit(packed: jax.Array, n: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack2bit`; returns int8 {-1,0,1} with last dim 4x."""
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    g = (packed[..., None] >> shifts) & jnp.uint8(3)            # (..., B/4, 4)
+    signs = g.astype(jnp.int8) - 1
+    out = signs.reshape(*packed.shape[:-1], -1)
+    if n is not None:
+        out = out[..., :n]
+    return out

@@ -1,0 +1,3 @@
+from .pipeline import LMStream, make_lm_batch, logreg_data, logistic_loss_and_grad
+
+__all__ = ["LMStream", "make_lm_batch", "logreg_data", "logistic_loss_and_grad"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for DIANA's compression hot path.
+
+quantize_pack:  fused block p-quantize + 2-bit pack (one HBM->VMEM pass)
+unpack_reduce:  streaming decode + accumulate over workers (server side)
+
+Each kernel has a pure-jnp oracle in :mod:`ref` and is validated in
+``tests/test_kernels.py`` over a shape/dtype/p sweep with ``interpret=True``.
+"""
+
+from . import ops, ref
+from .quantize_pack import quantize_pack
+from .unpack_reduce import unpack_reduce
+
+__all__ = ["ops", "ref", "quantize_pack", "unpack_reduce"]

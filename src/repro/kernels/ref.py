@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated with ``assert_allclose`` against the
+functions here across a sweep of shapes / dtypes / norm powers (see
+``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack2bit, unpack2bit
+from repro.core.quantization import lp_norm
+
+__all__ = ["uniform_from_bits", "ref_quantize_pack", "ref_unpack_reduce"]
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """uint32 -> uniform [0,1) f32 using the top 24 bits (TPU-friendly)."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def ref_quantize_pack(delta: jax.Array, bits: jax.Array, p: float):
+    """Fused block p-quantize + 2-bit pack oracle.
+
+    delta: (m, B) f32 — one row per quantization block.
+    bits:  (m, B) uint32 random bits.
+    Returns (packed (m, B/4) uint8, scales (m, 1) f32).
+    """
+    scales = lp_norm(delta, p, axis=-1, keepdims=True)            # (m, 1)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    probs = jnp.abs(delta) / safe
+    u = uniform_from_bits(bits)
+    xi = (u < probs).astype(jnp.int8)
+    signs = jnp.sign(delta).astype(jnp.int8) * xi
+    return pack2bit(signs), scales.astype(jnp.float32)
+
+
+def ref_unpack_reduce(packed: jax.Array, scales: jax.Array) -> jax.Array:
+    """Server-side decode: sum_i unpack(packed_i) * scales_i.
+
+    packed: (n, m, B/4) uint8; scales: (n, m, 1) f32 -> (m, B) f32 sum.
+    """
+    signs = unpack2bit(packed).astype(jnp.float32)                # (n, m, B)
+    return jnp.sum(signs * scales, axis=0)

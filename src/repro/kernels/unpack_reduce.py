@@ -1,0 +1,73 @@
+"""Server-side decode: unpack 2-bit ternary payloads and accumulate the sum
+over workers — the Pallas realisation of DIANA's ``mean_i dhat_i``.
+
+Grid layout ``(n_workers, m_tiles)``: the TPU grid is sequential, so the
+kernel revisits each output tile once per worker and accumulates in place
+(``out += unpack(packed_i) * scale_i``), initialising on the first visit with
+``pl.when``.  Peak VMEM per step is one packed tile (``TILE_M * B/4`` bytes),
+one scales column and the f32 accumulator tile — the dense per-worker payload
+is never materialised in HBM, which is the whole point: HBM traffic is
+``n * d/4`` bytes in, ``4d`` bytes out, instead of the ``n * 4d`` a naive
+unpack-then-sum would move.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["unpack_reduce", "DEFAULT_TILE_M"]
+
+DEFAULT_TILE_M = 8
+
+
+def _kernel(packed_ref, scales_ref, out_ref):
+    i = pl.program_id(0)  # worker index
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    packed = packed_ref[0]                                    # (TILE_M, B/4)
+    # Unpack with unrolled shifts (no captured constant arrays in Pallas).
+    parts = [
+        ((packed >> jnp.uint8(s)) & jnp.uint8(3)).astype(jnp.int8) - 1
+        for s in (0, 2, 4, 6)
+    ]
+    g = jnp.stack(parts, axis=-1)                             # (TILE_M, B/4, 4)
+    tm = packed.shape[0]
+    dense = g.reshape(tm, -1).astype(jnp.float32)             # (TILE_M, B)
+    out_ref[...] += dense * scales_ref[0].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def unpack_reduce(
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """packed (n, m, B/4) u8, scales (n, m, 1) f32 -> (m, B) f32 sum over n."""
+    n, m, b4 = packed.shape
+    mp = -(-m // tile_m) * tile_m
+    if mp != m:
+        packed = jnp.pad(packed, ((0, 0), (0, mp - m), (0, 0)))
+        scales = jnp.pad(scales, ((0, 0), (0, mp - m), (0, 0)))
+
+    grid = (n, mp // tile_m)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_m, b4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tile_m, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, b4 * 4), lambda i, j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, b4 * 4), jnp.float32),
+        interpret=interpret,
+    )(packed, scales)
+    return out[:m]

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, training/serving steps, multi-pod dry-run.
+
+NOTE: do not import ``dryrun`` from here — it sets XLA_FLAGS at import time
+and must only be executed as ``python -m repro.launch.dryrun``.
+"""
+
+from . import mesh, sharding_rules
+
+__all__ = ["mesh", "sharding_rules"]

@@ -1,0 +1,382 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination
+with 512 placeholder host devices, prove the sharding config is coherent, and
+extract the roofline terms (FLOPs / HBM bytes / collective bytes) from the
+compiled per-device module.
+
+Outputs one JSON per pair under --out (default experiments/dryrun/) that
+benchmarks/roofline.py and EXPERIMENTS.md consume.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    get_config,
+    get_shape,
+    input_specs,
+    shape_applicable,
+    SHAPES,
+)
+from repro.models import init_model, init_caches
+from repro.optim.diana_optimizer import DianaOptState
+
+# v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+HBM_BYTES = 16 * 1024**3   # 16 GiB
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\(?([a-z0-9]+)\[([\d,]*)\][^)]*\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """Sum per-device bytes moved by every collective in the compiled module.
+
+    Ring model per op (G = devices per replica group, S = result bytes):
+      all-gather:        S * (G-1)/G     (result is the gathered buffer)
+      reduce-scatter:    S * (G-1)       (operand = G * result shards pass through)
+      all-reduce:        2 * S * (G-1)/G
+      all-to-all:        S * (G-1)/G
+      collective-permute: S
+    """
+    ops = []
+    total = 0.0
+    by_kind: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, dtype, dims, kind = m.groups()
+        size = _shape_bytes(dtype, dims)
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len(gl.group(1).split(","))
+        g = g or 1
+        if g <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-gather":
+            moved = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = size * (g - 1)
+        elif kind == "all-reduce":
+            moved = 2 * size * (g - 1) / g
+        elif kind == "all-to-all":
+            moved = size * (g - 1) / g
+        else:  # collective-permute
+            moved = size
+        total += moved
+        by_kind[kind] = by_kind.get(kind, 0.0) + moved
+        ops.append({"kind": kind, "bytes": size, "group": g, "moved": moved})
+    return {"total_moved_bytes": total, "by_kind": by_kind, "n_ops": len(ops),
+            "ops": sorted(ops, key=lambda o: -o["moved"])[:20]}
+
+
+def _sds(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), tree, shardings
+    )
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *, compression: Optional[str] = None,
+               remat: Optional[str] = None, worker_axes: Optional[str] = None,
+               moe_chunk: Optional[int] = None, comp_block: Optional[int] = None):
+    """Lower + compile one (arch, shape) on ``mesh``. Returns result dict."""
+    from dataclasses import replace as dc_replace
+
+    from repro.launch.serve import build_serve_step, decode_window, serve_cache_shardings
+    from repro.launch.sharding_rules import batch_specs, param_specs
+    from repro.launch.train import (
+        build_train_step, make_optimizer, train_state_shardings,
+    )
+    from repro.launch.mesh import data_axes, resolve_train_mesh, worker_axes_in, worker_count
+
+    cfg = get_config(arch)
+    if compression:
+        cfg = dc_replace(cfg, compression=compression)
+    if remat:
+        cfg = dc_replace(cfg, remat=remat)
+    if worker_axes:
+        cfg = dc_replace(cfg, comp_worker_axes=tuple(worker_axes.split(",")))
+    if comp_block:
+        cfg = dc_replace(cfg, comp_block=comp_block)
+    if moe_chunk and cfg.moe is not None:
+        cfg = dc_replace(cfg, moe=dc_replace(cfg.moe, token_chunk=moe_chunk))
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: init_model(cfg, k), key)
+    n_params = sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree_util.tree_leaves(params_shape))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        # NB: the step runs on the RESOLVED mesh (worker axes flattened
+        # pod-major when they span pod x data — XLA cannot partition under
+        # more than one manual axis; see mesh.resolve_train_mesh).
+        smesh, waxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+        n_workers = worker_count(smesh, waxes)
+        opt_state_shape = jax.eval_shape(lambda p: opt.init(p, n_workers), params_shape)
+        p_shard, o_shard = train_state_shardings(cfg, opt, mesh, params_shape, opt_state_shape)
+        step_fn = build_train_step(cfg, opt, mesh, shape)
+
+        batch_shape = input_specs(cfg, shape)
+        b_specs = batch_specs(batch_shape, smesh)
+        b_shard = jax.tree_util.tree_map(lambda s: NamedSharding(smesh, s), b_specs)
+        args = (
+            _sds(params_shape, p_shard),
+            _sds(opt_state_shape, o_shard),
+            _sds(batch_shape, b_shard),
+            jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=NamedSharding(smesh, P())),
+        )
+        lowered = step_fn.lower(*args)
+    elif shape.kind == "prefill":
+        from repro.launch.serve import build_prefill
+
+        pspecs = param_specs(params_shape, cfg, mesh)
+        p_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+        batch_shape = input_specs(cfg, shape)
+        b_specs = batch_specs(batch_shape, mesh)
+        b_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), b_specs)
+        step_fn = build_prefill(cfg, mesh, shape)
+        lowered = step_fn.lower(_sds(params_shape, p_shard), _sds(batch_shape, b_shard))
+    else:  # decode
+        pspecs = param_specs(params_shape, cfg, mesh)
+        p_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+        c_shard, caches_shape, window = serve_cache_shardings(cfg, mesh, shape)
+        step_fn = build_serve_step(cfg, mesh, shape)
+        tok = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32, sharding=NamedSharding(mesh, P())
+        )
+        lowered = step_fn.lower(_sds(params_shape, p_shard), _sds(caches_shape, c_shard), tok)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+
+    mem_bytes = (
+        getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        + getattr(mem, "temp_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0)
+    )
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    n_chips = mesh.size
+    result = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "mesh_axes": list(mesh.axis_names),
+        "n_chips": n_chips,
+        "n_params": int(n_params),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "per_device": {
+            "memory_bytes": int(mem_bytes),
+            "hlo_flops": flops,
+            "hlo_bytes_accessed": bytes_accessed,
+            "collective_moved_bytes": colls["total_moved_bytes"],
+        },
+        "collectives": {"by_kind": colls["by_kind"], "n_ops": colls["n_ops"],
+                        "top_ops": colls["ops"]},
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_accessed / HBM_BW,
+            "collective_s": colls["total_moved_bytes"] / ICI_BW,
+        },
+        "fits_hbm": bool(mem_bytes <= HBM_BYTES),
+    }
+    dom = max(result["roofline"], key=result["roofline"].get)
+    result["roofline"]["dominant"] = dom
+    return result
+
+
+def _isolated_sweep(args):
+    """Run each (mesh, arch, shape) pair in its own subprocess."""
+    import subprocess
+
+    archs = args.arch or (list(ASSIGNED_ARCHS) if args.all else ["llama3.2-1b"])
+    shapes = args.shape or (list(SHAPES) if args.all else ["train_4k"])
+    pods = {"no": ["no"], "yes": ["yes"], "both": ["no", "yes"]}[args.multi_pod]
+
+    failures = []
+    for pod in pods:
+        mesh_tag = "multipod" if pod == "yes" else "singlepod"
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{mesh_tag}/{arch}_{shape_name}"
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--multi-pod", pod, "--out", args.out]
+                if args.devices:
+                    cmd += ["--devices", str(args.devices)]
+                if args.compression:
+                    cmd += ["--compression", args.compression]
+                if args.remat:
+                    cmd += ["--remat", args.remat]
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                # process-level aborts (XLA CHECK failures) leave no JSON —
+                # write an error artifact so the roofline table shows them
+                path = os.path.join(args.out, mesh_tag, f"{arch}_{shape_name}.json")
+                if r.returncode != 0 and not _fresh(path, t0):
+                    os.makedirs(os.path.dirname(path), exist_ok=True)
+                    tail = (r.stderr or r.stdout or "")[-1500:]
+                    with open(path, "w") as f:
+                        json.dump({"status": "error", "arch": arch, "shape": shape_name,
+                                   "error": f"process exit {r.returncode}",
+                                   "trace": tail}, f, indent=1)
+                if r.returncode != 0:
+                    failures.append(tag)
+                for line in (r.stdout or "").splitlines():
+                    if line.startswith("["):
+                        print(line, flush=True)
+                if r.returncode != 0:
+                    print(f"[{time.time()-t0:6.1f}s] {tag}: PROCESS-FAIL rc={r.returncode}",
+                          flush=True)
+    if failures:
+        print(f"\nFAILED pairs ({len(failures)}): {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall requested pairs lowered + compiled OK")
+
+
+def _fresh(path, t0):
+    return os.path.exists(path) and os.path.getmtime(path) >= t0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--compression", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--worker-axes", default=None, help="e.g. 'pod' or 'pod,data'")
+    ap.add_argument("--moe-chunk", type=int, default=None)
+    ap.add_argument("--comp-block", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="test override: small mesh (e.g. 8 -> 2x2x2)")
+    ap.add_argument("--isolate", action="store_true",
+                    help="one subprocess per pair — XLA partitioner CHECK "
+                         "failures abort the process and would kill the sweep")
+    args = ap.parse_args(argv)
+
+    if args.isolate:
+        return _isolated_sweep(args)
+
+    from repro.launch.mesh import make_production_mesh, make_mesh
+
+    archs = args.arch or (list(ASSIGNED_ARCHS) if args.all else ["llama3.2-1b"])
+    shapes = args.shape or (list(SHAPES) if args.all else ["train_4k"])
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in pods:
+        if args.devices:
+            if multi_pod:
+                mesh = make_mesh((2, 2, args.devices // 4), ("pod", "data", "model"))
+            else:
+                mesh = make_mesh((2, args.devices // 2), ("data", "model"))
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = "multipod" if multi_pod else "singlepod"
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{mesh_tag}/{arch}_{shape_name}"
+                t0 = time.time()
+                try:
+                    res = lower_pair(arch, shape_name, mesh,
+                                     compression=args.compression, remat=args.remat,
+                                     worker_axes=args.worker_axes,
+                                     moe_chunk=args.moe_chunk,
+                                     comp_block=args.comp_block)
+                except Exception as e:  # a failure here is a sharding bug
+                    res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures.append(tag)
+                res.setdefault("arch", arch)
+                res.setdefault("shape", shape_name)
+                path = os.path.join(args.out, mesh_tag)
+                os.makedirs(path, exist_ok=True)
+                with open(os.path.join(path, f"{arch}_{shape_name}.json"), "w") as f:
+                    json.dump(res, f, indent=1, default=float)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f"mem={res['per_device']['memory_bytes']/2**30:.2f}GiB "
+                             f"fits={res['fits_hbm']} compute={r['compute_s']*1e3:.2f}ms "
+                             f"memory={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
+                             f"dom={r['dominant']} compile={res['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = res["error"][:160]
+                else:
+                    extra = res.get("reason", "")[:100]
+                print(f"[{time.time()-t0:6.1f}s] {tag}: {status} {extra}", flush=True)
+
+    if failures:
+        print(f"\nFAILED pairs ({len(failures)}): {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall requested pairs lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Boundary sharding derivation: param / optimizer-state / cache / batch specs.
+
+JAX requires *even* divisibility for jit in_shardings, so every rule checks
+divisibility and falls back to replication for that dim — interior
+``with_sharding_constraint`` annotations (which tolerate padding) still guide
+GSPMD where it matters.  FSDP: when the DIANA workers are coarser than the
+data axes (hierarchical mode), the inner data axes are free to ZeRO-shard
+params/optimizer state; ``fsdp_axes`` names them.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "named", "replicated"]
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    if not axes:
+        return False
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def _dim(mesh, dim_size, axes):
+    """axes (str | tuple | None) if divisible else None."""
+    if axes is None:
+        return None
+    ax = tuple(a for a in ((axes,) if isinstance(axes, str) else axes))
+    return (ax if len(ax) > 1 else ax[0]) if _fits(dim_size, mesh, ax) else None
+
+
+def param_specs(params, cfg, mesh, *, fsdp_axes: Tuple[str, ...] = ()) -> Any:
+    """PartitionSpec pytree for the model params.
+
+    Rules (DESIGN.md): attention/MLP weights shard their feature dim over
+    'model' (flattened H*Dh — always divisible); the other matmul dim FSDPs
+    over the inner data axes in hierarchical mode; embeddings shard the padded
+    vocab over 'model'; norms/bias/small vectors replicate.
+    """
+    model_ax = "model" if "model" in mesh.axis_names else None
+    fsdp = tuple(a for a in fsdp_axes if a in mesh.axis_names) or None
+
+    def spec_for(path, leaf):
+        names = [_path_str(p) for p in path]
+        name = names[-1]
+        nd = leaf.ndim
+        in_blocks = "blocks" in names
+        lead = (None,) if in_blocks else ()   # stacked layer dim
+
+        def mk(*dims):
+            return P(*(lead + dims))
+
+        d = {a: None for a in ()}
+        if name in ("embed",):
+            # vocab dim stays UNsharded: XLA's SPMD partitioner cannot handle
+            # the token-gather into a sharded dim under manual subgroups
+            # (spmd_partitioner_util CHECK failure) — shard the feature dim.
+            return P(None, _dim(mesh, leaf.shape[1], model_ax))
+        if name in ("lm_head",):
+            return P(_dim(mesh, leaf.shape[0], fsdp), _dim(mesh, leaf.shape[1], model_ax))
+        if name in ("wq", "wk", "wv", "w_in", "w_gate", "in_proj"):
+            # (.., D, F): column-parallel -> F over model, D over fsdp
+            if nd - len(lead) == 2:
+                return mk(_dim(mesh, leaf.shape[-2], fsdp), _dim(mesh, leaf.shape[-1], model_ax))
+        if name in ("wo", "w_out", "out_proj"):
+            if nd - len(lead) == 2:
+                return mk(_dim(mesh, leaf.shape[-2], model_ax), _dim(mesh, leaf.shape[-1], fsdp))
+        if "mlp" in names and name in ("w_in", "w_gate", "w_out") and nd - len(lead) == 3:
+            # MoE experts (E, D, F) / (E, F, D)
+            e = leaf.shape[-3]
+            if cfg.moe and cfg.moe.partition == "expert" and _fits(e, mesh, (model_ax,)):
+                return mk(model_ax, _dim(mesh, leaf.shape[-2], fsdp), None)
+            # ffn-partitioned experts: shard the hidden dim
+            if name == "w_out":
+                return mk(None, _dim(mesh, leaf.shape[-2], model_ax), _dim(mesh, leaf.shape[-1], fsdp))
+            return mk(None, _dim(mesh, leaf.shape[-2], fsdp), _dim(mesh, leaf.shape[-1], model_ax))
+        if name == "router":
+            return mk(_dim(mesh, leaf.shape[-2], fsdp), None)
+        if name == "conv_w":
+            return mk(None, _dim(mesh, leaf.shape[-1], model_ax))
+        if name == "w" and "frontend_proj" in names:
+            return P(_dim(mesh, leaf.shape[0], fsdp), _dim(mesh, leaf.shape[1], model_ax))
+        # norms, biases, scalars, dt_bias, A_log, D, conv_b, norm_scale ...
+        return P(*((None,) * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [spec_for(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _path_str(entry) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def batch_specs(batch_like, mesh, *, data_only: bool = False) -> Any:
+    """Batch dim over all data axes (boundary: global batch divisible by them)."""
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec_for(leaf):
+        b = leaf.shape[0]
+        first = _dim(mesh, b, ax)
+        return P(*((first,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(spec_for, batch_like)
+
+
+def cache_specs(caches, cfg, mesh, *, batch: int) -> Any:
+    """Decode-cache sharding: batch over data axes when it divides, else the
+    cache sequence dim (long_500k batch=1 -> sequence parallelism); SSD/conv
+    states shard their channel/head dims over 'model'."""
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    batch_fits = _fits(batch, mesh, dax) if dax else False
+
+    def spec_for(path, leaf):
+        names = [_path_str(p) for p in path]
+        name = names[-1]
+        # all caches are stacked over blocks -> leading n_blocks dim
+        if name in ("k", "v"):       # (nb, B, S, Hkv, Dh)
+            # kv_heads rarely divide the model axis (GQA), so the HEAD_DIM
+            # shards over 'model' instead — score contractions become partial
+            # sums + a tiny all-reduce, and the cache bytes drop 16x.
+            hd = _dim(mesh, leaf.shape[3], model_ax) or None
+            dh = None if hd else _dim(mesh, leaf.shape[4], model_ax)
+            if batch_fits:
+                return P(None, dax, None, hd, dh)
+            return P(None, None, _dim(mesh, leaf.shape[2], dax), hd, dh)
+        if name == "conv":           # (nb, B, W-1, CH)
+            return P(None, dax if batch_fits else None, None, _dim(mesh, leaf.shape[3], model_ax))
+        if name == "ssm":            # (nb, B, H, P, N)
+            return P(None, dax if batch_fits else None, _dim(mesh, leaf.shape[2], model_ax), None, None)
+        return P(*((None,) * leaf.ndim))  # pos counters etc.
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(treedef, [spec_for(p, l) for p, l in flat])

@@ -1,0 +1,312 @@
+"""Distributed DIANA training step + CLI training driver.
+
+Topology-aware composition (DESIGN.md §3):
+
+    jit( shard_map(local_step, manual=worker_axes) )
+
+* manual axes = the DIANA worker axes.  Inside the body ``jax.grad`` yields
+  each worker's LOCAL gradient (no implicit cross-worker reduce) — exactly the
+  ``g_i^k`` Algorithm 1 needs.
+* everything else ('model', and 'data' in hierarchical mode) stays auto:
+  GSPMD lowers the tensor/expert parallelism from the logical-axis
+  annotations in the model code, and ZeRO/FSDP-shards params + optimizer
+  state over the inner data axes when the workers are pods.
+* the compressed all-gather + replicated decode inside
+  ``core.diana.aggregate_shardmap`` is the paper's Gather+Broadcast.
+
+Paper-faithful mode: ``worker_axes=('pod','data')`` — every data slice is a
+worker, params replicated over data.  Hierarchical (beyond-paper):
+``worker_axes=('pod',)`` — compress only the slow inter-pod link.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import math
+import time
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, input_specs
+from repro.core.compression import CompressionConfig
+from repro.core.diana import DianaState, aggregate_shardmap
+from repro.models import init_model, train_loss
+from repro.models.sharding import GSPMDPolicy, sharding_policy
+from repro.optim import DianaOptimizer, momentum, adamw, constant_schedule
+from repro.optim.diana_optimizer import DianaOptState
+
+from .mesh import (
+    data_axes,
+    make_mesh,
+    make_production_mesh,
+    resolve_train_mesh,
+    worker_axes_in,
+    worker_count,
+    worker_index,
+)
+from .sharding_rules import batch_specs, param_specs
+
+__all__ = ["build_train_step", "train_state_shardings", "init_train_state", "make_optimizer"]
+
+
+def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: float = 0.9,
+                   compression: Optional[CompressionConfig] = None) -> DianaOptimizer:
+    comp = compression or CompressionConfig(
+        method=cfg.compression,
+        p=cfg.comp_p,
+        block_size=cfg.comp_block,
+        worker_axes=cfg.comp_worker_axes,
+        h_dtype=cfg.h_dtype,
+    )
+    inner_opt = adamw() if inner == "adamw" else momentum(beta)
+    return DianaOptimizer(comp, inner_opt, schedule=constant_schedule(lr))
+
+
+# ---------------------------------------------------------------------------
+# Sharding of the training state
+# ---------------------------------------------------------------------------
+
+def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_state_shape):
+    """NamedSharding pytrees for (params, opt_state) — on the RESOLVED train
+    mesh (see mesh.resolve_train_mesh); callers must place batches there too."""
+    mesh, waxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    fsdp = tuple(a for a in data_axes(mesh) if a not in waxes)
+    pspecs = param_specs(params_shape, cfg, mesh, fsdp_axes=fsdp)
+    p_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    wtuple = waxes if len(waxes) != 1 else waxes[0]
+    h_specs = h_flat_specs(pspecs)
+
+    diana_shard = DianaState(
+        h_worker=jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, P(wtuple if waxes else None, *s)), h_specs
+        ),
+        h_server=jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), h_specs),
+    )
+    # inner optimizer state mirrors params (momentum/adam buffers)
+    inner_shard = _inner_shardings(opt_state_shape.inner, p_shard, mesh)
+    opt_shard = DianaOptState(
+        step=NamedSharding(mesh, P()), inner=inner_shard, diana=diana_shard
+    )
+    return p_shard, opt_shard
+
+
+def h_flat_specs(grad_specs):
+    """Per-leaf PartitionSpec for the flat DIANA memories, derived from the
+    gradient specs so that each h leaf's LOCAL length equals the flattened
+    local gradient shard inside the nested manual aggregation: the flat dim
+    shards over the combined tuple of the leaf's sharded axes (replicated
+    leaves keep replicated memories)."""
+
+    def to_h(spec):
+        axes = []
+        for entry in spec:
+            if entry is None:
+                continue
+            if isinstance(entry, tuple):
+                axes.extend(entry)
+            else:
+                axes.append(entry)
+        if not axes:
+            return P(None)
+        return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+    return jax.tree_util.tree_map(
+        to_h, grad_specs, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def _inner_shardings(inner_shape, p_shard, mesh):
+    """Momentum: a params-shaped tree; AdamW: two of them + a counter; SGD: ()."""
+    from repro.optim.optimizers import AdamState
+
+    if isinstance(inner_shape, AdamState):
+        return AdamState(mu=p_shard, nu=p_shard, count=NamedSharding(mesh, P()))
+    if isinstance(inner_shape, tuple) and len(inner_shape) == 0:
+        return ()
+    return p_shard
+
+
+# ---------------------------------------------------------------------------
+# The step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Optional[int] = None):
+    """Returns a jitted ``step(params, opt_state, batch, key) -> (params, opt_state, metrics)``."""
+    comp = opt.compression
+    mesh, waxes = resolve_train_mesh(mesh, comp.worker_axes)
+    n_workers = worker_count(mesh, waxes)
+    daxes = data_axes(mesh)
+    wtuple = waxes if len(waxes) != 1 else waxes[0]
+
+    inner_axes = tuple(a for a in mesh.axis_names if a not in waxes)
+    fsdp = tuple(a for a in daxes if a not in waxes)
+
+    def local_step(params, opt_state, batch, key):
+        policy = GSPMDPolicy(mesh, manual=waxes)
+        with sharding_policy(policy):
+            loss, grads = jax.value_and_grad(
+                lambda p: train_loss(p, batch, cfg, window=window)
+            )(params)
+
+            widx = worker_index(waxes)
+            wkey = jax.random.fold_in(key, widx)
+            gspecs = param_specs(params, cfg, mesh, fsdp_axes=fsdp)
+            ghat, new_diana = aggregate_shardmap(
+                grads, opt_state.diana, wkey, comp,
+                axis_names=waxes, n_workers=n_workers,
+                inner_axes=inner_axes,
+                grad_specs=gspecs,
+                h_specs=h_flat_specs(gspecs),
+                mesh=mesh,
+            )
+            if waxes:
+                loss = jax.lax.pmean(loss, waxes)
+            new_params, new_opt = opt.apply_direction(params, ghat, opt_state, new_diana)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(ghat)))
+        metrics = {"loss": loss, "ghat_norm": gnorm, "step": new_opt.step}
+        return new_params, new_opt, metrics
+
+    if not waxes:
+        return jax.jit(local_step, donate_argnums=(0, 1))
+
+    # --- shard_map in/out specs: manual axes only ---
+    rep = P()
+
+    def p_spec(_):
+        return rep
+
+    def opt_spec_tree(opt_state_shape):
+        diana_spec = DianaState(
+            h_worker=jax.tree_util.tree_map(lambda _: P(wtuple), opt_state_shape.diana.h_worker),
+            h_server=jax.tree_util.tree_map(lambda _: rep, opt_state_shape.diana.h_server),
+        )
+        return DianaOptState(
+            step=rep,
+            inner=jax.tree_util.tree_map(lambda _: rep, opt_state_shape.inner),
+            diana=diana_spec,
+        )
+
+    def batch_spec_tree(batch_shape):
+        return jax.tree_util.tree_map(lambda _: P(wtuple), batch_shape)
+
+    def wrapped(params, opt_state, batch, key):
+        in_specs = (
+            jax.tree_util.tree_map(p_spec, params),
+            opt_spec_tree(opt_state),
+            batch_spec_tree(batch),
+            rep,
+        )
+        out_specs = (
+            jax.tree_util.tree_map(p_spec, params),
+            opt_spec_tree(opt_state),
+            {"loss": rep, "ghat_norm": rep, "step": rep},
+        )
+        fn = shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names=set(waxes),
+            check_vma=False,
+        )
+        return fn(params, opt_state, batch, key)
+
+    return jax.jit(wrapped, donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# State init (concrete, for real runs)
+# ---------------------------------------------------------------------------
+
+def init_train_state(cfg, opt: DianaOptimizer, mesh, key):
+    waxes = worker_axes_in(mesh, opt.compression.worker_axes)
+    n_workers = worker_count(mesh, waxes)
+
+    params_shape = jax.eval_shape(lambda k: init_model(cfg, k), key)
+    opt_state_shape = jax.eval_shape(lambda p: opt.init(p, n_workers), params_shape)
+    p_shard, o_shard = train_state_shardings(cfg, opt, mesh, params_shape, opt_state_shape)
+
+    params = jax.jit(lambda k: init_model(cfg, k), out_shardings=p_shard)(key)
+    opt_state = jax.jit(lambda p: opt.init(p, n_workers), out_shardings=o_shard)(params)
+    return params, opt_state, (p_shard, o_shard)
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="DIANA distributed trainer")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--inner", default="momentum", choices=["momentum", "adamw"])
+    ap.add_argument("--compression", default=None,
+                    choices=[None, "diana", "qsgd", "terngrad", "dqgd", "none"])
+    ap.add_argument("--mesh", default=None, help="e.g. 2x2 (data x model) or 2x2x2")
+    ap.add_argument("--reduced", action="store_true", help="toy config for CPU runs")
+    ap.add_argument("--batch", type=int, default=None, help="override global batch")
+    ap.add_argument("--seq", type=int, default=None, help="override sequence length")
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args(argv)
+
+    from dataclasses import replace as dc_replace
+
+    from repro.configs import reduced as make_reduced
+    from repro.configs.base import ShapeConfig
+    from repro.data import make_lm_batch
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    if args.compression:
+        cfg = dc_replace(cfg, compression=args.compression)
+    shape = get_shape(args.shape)
+    if args.batch or args.seq:
+        shape = ShapeConfig(shape.name, args.seq or shape.seq_len,
+                            args.batch or shape.global_batch, shape.kind)
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = make_mesh(dims, axes)
+    else:
+        mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+
+    opt = make_optimizer(cfg, lr=args.lr, inner=args.inner)
+    key = jax.random.PRNGKey(0)
+    params, opt_state, _ = init_train_state(cfg, opt, mesh, key)
+    step_fn = build_train_step(cfg, opt, mesh, shape)
+    smesh, _ = resolve_train_mesh(mesh, opt.compression.worker_axes)
+
+    from repro.launch.sharding_rules import batch_specs as bspecs
+
+    for step in range(args.steps):
+        host_batch = make_lm_batch(cfg, shape, step)
+        bs = bspecs(host_batch, smesh)
+        batch = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, NamedSharding(smesh, s)), host_batch, bs
+        )
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch, jax.random.fold_in(key, step))
+        loss = float(metrics["loss"])
+        print(f"step {step:4d} loss {loss:8.4f} ghat {float(metrics['ghat_norm']):9.4f} "
+              f"({time.perf_counter() - t0:5.2f}s)")
+
+    if args.checkpoint_dir:
+        from repro.checkpoint import save_checkpoint
+
+        save_checkpoint(args.checkpoint_dir, args.steps, {"params": params})
+        print(f"checkpoint written to {args.checkpoint_dir}")
+
+
+if __name__ == "__main__":
+    main()

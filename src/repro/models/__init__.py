@@ -1,0 +1,21 @@
+"""Model zoo: one decoder-only family covering all assigned architectures."""
+
+from . import layers, mamba2, moe, sharding, transformer
+from .transformer import (
+    init_model,
+    forward,
+    train_loss,
+    init_caches,
+    decode_step,
+    count_params,
+    count_active_params,
+    model_flops_per_token,
+)
+from .sharding import shard, sharding_policy, GSPMDPolicy
+
+__all__ = [
+    "layers", "mamba2", "moe", "sharding", "transformer",
+    "init_model", "forward", "train_loss", "init_caches", "decode_step",
+    "count_params", "count_active_params", "model_flops_per_token",
+    "shard", "sharding_policy", "GSPMDPolicy",
+]

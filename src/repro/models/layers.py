@@ -1,0 +1,352 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (train/prefill,
+cached decode, sliding-window), dense MLP variants.
+
+Functional style: ``init_*`` returns a param pytree, ``apply`` functions are
+pure.  Sharding is annotated through :mod:`repro.models.sharding` logical axes
+so the same code runs on one CPU device, under full GSPMD, or inside the
+DIANA shard_map.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import shard, shard_replicated
+
+__all__ = [
+    "rms_norm", "init_rms_norm",
+    "rope_freqs", "apply_rope",
+    "init_attention", "attention", "AttnCache", "init_attn_cache",
+    "init_mlp", "mlp",
+]
+
+
+# ---------------------------------------------------------------------------
+# Norm
+# ---------------------------------------------------------------------------
+
+def init_rms_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-5):
+    scale = shard_replicated(params["scale"])
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32.
+
+    Rotate-half (contiguous-halves) convention.  NOTE: the interleaved
+    convention's strided slices ``x[..., 0::2]`` lower to HLO gathers whose
+    SPMD partitioning crashes XLA under manual subgroups (CHECK failure in
+    spmd_partitioner_util) — contiguous half-slices lower to plain slices and
+    partition cleanly.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                                  # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (B, S, Dh/2)
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : dh // 2], xf[..., dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, cached decode)
+# ---------------------------------------------------------------------------
+
+class AttnCache(NamedTuple):
+    """KV cache. The sliding window size is NOT stored here (it must stay a
+    static Python value — caches get stacked/scanned); pass ``window=`` to
+    :func:`attention` consistently with how the cache was initialised.
+
+    bf16 caches are STORED as bit-equal uint16: XLA's CPU backend promotes
+    bf16 dynamic-update-slice to f32, which would triple decode memory in the
+    dry-run (and the integer view is harmless on TPU).  ``_cache_view`` /
+    ``_cache_store`` do the bitcasts."""
+
+    k: jax.Array          # (B, S_cache, Hkv, Dh) — S_cache = seq or window
+    v: jax.Array
+    pos: jax.Array        # () int32 — absolute position of next token
+
+
+def _storage_dtype(dtype):
+    return jnp.uint16 if dtype == jnp.bfloat16 else dtype
+
+
+def _cache_view(buf, dtype):
+    """storage -> compute view (bit-equal)."""
+    if buf.dtype == jnp.uint16 and dtype == jnp.bfloat16:
+        return jax.lax.bitcast_convert_type(buf, jnp.bfloat16)
+    return buf
+
+
+def _cache_store(x, storage_dtype):
+    if storage_dtype == jnp.uint16 and x.dtype != jnp.uint16:
+        return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint16)
+    return x.astype(storage_dtype)
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": (jax.random.normal(k1, (d, h * dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, hkv * dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, hkv * dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * dh, d)) * s / math.sqrt(2 * cfg.n_layers)).astype(dtype),
+    }
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype, window: Optional[int] = None) -> AttnCache:
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    w = int(window or 0)
+    s_cache = min(max_len, w) if w else max_len
+    sdt = _storage_dtype(dtype)
+    return AttnCache(
+        k=jnp.zeros((batch, s_cache, hkv, dh), sdt),
+        v=jnp.zeros((batch, s_cache, hkv, dh), sdt),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q: (B,Sq,H,Dh), k/v: (B,Sk,Hkv,Dh), mask: (B,1,Sq,Sk) bool.
+
+    H-major score layout with the KV heads repeated to H: the (g, r)-grouped
+    layout leaves the S x S score tensor unshardable over 'model' (propagation
+    replicates 10s of GiB at train_4k scale); in H-major the scores pin to
+    P(_, 'model', _, _) whenever H divides the axis.  k/v stay in their
+    storage dtype with f32 MXU accumulation (``preferred_element_type``)."""
+    from .sharding import GSPMDPolicy, current_policy
+
+    h, hkv = q.shape[2], k.shape[2]
+    rep = h // hkv
+    dh = q.shape[-1]
+    qs = (q.astype(jnp.float32) / math.sqrt(dh)).astype(k.dtype)
+    kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k         # broadcast, no gather
+    vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+
+    hs = "model"
+    pol = current_policy()
+    if isinstance(pol, GSPMDPolicy):
+        ms = pol.mesh.shape.get("model", 1)
+        if h % ms:
+            hs = None                                          # uneven heads: replicate
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qs, kr,
+                        preferred_element_type=jnp.float32)
+    scores = shard(scores, "batch", hs, None, None)
+    scores = jnp.where(mask, scores, -1e30)                    # mask (B,1,Sq,Sk)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = shard(probs, "batch", hs, None, None)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vr.dtype), vr,
+                     preferred_element_type=jnp.float32)
+    return out.astype(cfg.compute_dtype)
+
+
+def _sdpa_qchunked(q, k, v, cfg, *, window, chunk: int):
+    """Query-chunked causal attention: O(S^2) compute, O(chunk * S) score
+    memory — the S x S score tensor at prefill_32k would be 16 GiB/device.
+
+    Scans over query chunks (full keys per chunk, masked softmax); with
+    ``cfg.scan_unroll`` the scan is statically unrolled (no dynamic-slice —
+    required under multiple manual mesh axes, see train.py)."""
+    b, s, h, dh = q.shape
+    nq = s // chunk
+    qb = jnp.moveaxis(q.reshape(b, nq, chunk, h, dh), 1, 0)     # (nq, B, cq, H, Dh)
+    idx_k = jnp.arange(s)
+
+    def one(qi, qc):
+        q_pos = qi * chunk + jnp.arange(chunk)
+        m = q_pos[:, None] >= idx_k[None, :]
+        if window:
+            m &= q_pos[:, None] - idx_k[None, :] < window
+        return _sdpa(qc, k, v, m[None, None], cfg)              # (B, cq, H, Dh)
+
+    # remat each chunk: without it the map/backward keeps every chunk's
+    # (B, H, cq, S) score tensor live simultaneously
+    one = jax.checkpoint(one)
+
+    if getattr(cfg, "scan_unroll", False):
+        outs = [one(i, qb[i]) for i in range(nq)]
+        return jnp.concatenate(outs, axis=1)
+    stacked = jax.lax.map(lambda args: one(*args), (jnp.arange(nq), qb))
+    return jnp.moveaxis(stacked, 0, 1).reshape(b, s, h, dh)
+
+
+DECODE_KV_CHUNK = 4096
+
+
+def _decode_attention(q, k_cache, v_cache, valid, cfg):
+    """Flash-decoding: one query token against a long cache, KV-chunked with
+    online (max, num, den) combination.
+
+    Exact softmax attention; the chunking bounds the working set — the CPU
+    dry-run backend otherwise materialises an f32 convert of the ENTIRE cache
+    for the score dot (8 GiB/device at decode_32k), and on TPU the chunk loop
+    is where sequence-parallel partial results combine (two small
+    all-reduces when the cache seq dim is sharded).
+    """
+    b, _, h, dh = q.shape
+    s_cache, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    ck = min(DECODE_KV_CHUNK, s_cache)
+    if s_cache % ck:
+        ck = s_cache  # fall back to single chunk for odd cache lengths
+    nk = s_cache // ck
+
+    compute_kv = cfg.compute_dtype
+    qg = (q.astype(jnp.float32) / math.sqrt(dh)).astype(compute_kv)
+    qg = qg.reshape(b, hkv, rep, dh)                       # Sq == 1 squeezed
+
+    kb = jnp.moveaxis(k_cache.reshape(b, nk, ck, hkv, dh), 1, 0)
+    vb = jnp.moveaxis(v_cache.reshape(b, nk, ck, hkv, dh), 1, 0)
+    validb = valid.reshape(nk, ck)
+
+    def chunk_fn(args):
+        kc, vc, vm = args                                  # (B,ck,Hkv,Dh), (ck,)
+        kc = _cache_view(kc, compute_kv)                   # u16 storage -> bf16
+        vc = _cache_view(vc, compute_kv)
+        s = jnp.einsum("bgrd,bkgd->bgrk", qg, kc, preferred_element_type=jnp.float32)
+        s = jnp.where(vm[None, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1, keepdims=True)             # (B,g,r,1)
+        e = jnp.exp(s - m)
+        num = jnp.einsum("bgrk,bkgd->bgrd", e.astype(vc.dtype), vc,
+                         preferred_element_type=jnp.float32)
+        den = jnp.sum(e, axis=-1, keepdims=True)
+        return m[..., 0], num, den[..., 0]
+
+    ms, nums, dens = jax.lax.map(chunk_fn, (kb, vb, validb))
+    m_all = jnp.max(ms, axis=0, keepdims=True)             # (1,B,g,r)
+    scale = jnp.exp(ms - m_all)                            # (nk,B,g,r)
+    num = jnp.sum(nums * scale[..., None], axis=0)         # (B,g,r,Dh)
+    den = jnp.sum(dens * scale, axis=0)                    # (B,g,r)
+    out = num / jnp.maximum(den[..., None], 1e-30)
+    return out.reshape(b, 1, h, dh).astype(cfg.compute_dtype)
+
+
+def attention(
+    params,
+    x,
+    cfg,
+    positions,
+    cache: Optional[AttnCache] = None,
+    window: Optional[int] = None,
+):
+    """Returns (out, new_cache).
+
+    * cache is None: full (or sliding-window-masked) causal self-attention over
+      ``x`` — the train / prefill path.
+    * cache is not None: ``x`` is one new token per sequence (S=1); the KV cache
+      is updated (ring buffer when ``cache.window > 0``) — the decode path.
+    """
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    q = (x @ params["wq"].astype(cfg.compute_dtype)).reshape(b, s, h, dh)
+    k = (x @ params["wk"].astype(cfg.compute_dtype)).reshape(b, s, hkv, dh)
+    v = (x @ params["wv"].astype(cfg.compute_dtype)).reshape(b, s, hkv, dh)
+    # q heads shard over 'model' (policy drops the axis when not divisible);
+    # kv heads are replicated over 'model' when n_kv_heads < model axis (GQA).
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        cq = max(int(getattr(cfg, "attn_q_chunk", 0) or 0), 0)
+        if cq and s > cq and s % cq == 0:
+            out = _sdpa_qchunked(q, k, v, cfg, window=window, chunk=cq)
+        else:
+            idx = jnp.arange(s)
+            causal = idx[:, None] >= idx[None, :]                      # (Sq, Sk)
+            if window:
+                causal &= idx[:, None] - idx[None, :] < window
+            out = _sdpa(q, k, v, causal[None, None], cfg)              # broadcast over (B,1)
+        new_cache = None
+    else:
+        assert s == 1, "decode path expects one new token"
+        w = int(window or 0)
+        slot = cache.pos % w if w else cache.pos
+        k_cache = _update_cache(cache.k, _cache_store(k, cache.k.dtype), slot)
+        v_cache = _update_cache(cache.v, _cache_store(v, cache.v.dtype), slot)
+        k_cache = shard(k_cache, "batch" if b > 1 else None, "seq" if b == 1 else None, None, None)
+        v_cache = shard(v_cache, "batch" if b > 1 else None, "seq" if b == 1 else None, None, None)
+
+        s_cache = k_cache.shape[1]
+        cache_idx = jnp.arange(s_cache)
+        if w:
+            # ring buffer: slot j holds absolute position pos - ((slot - j) mod w);
+            # valid iff that position has been written (>= 0).
+            age = (slot - cache_idx) % w
+            abs_pos = cache.pos - age
+            valid = abs_pos >= 0
+        else:
+            valid = cache_idx <= cache.pos
+        out = _decode_attention(q, k_cache, v_cache, valid, cfg)
+        new_cache = AttnCache(k=k_cache, v=v_cache, pos=cache.pos + 1)
+
+    out = out.reshape(b, s, h * dh)
+    out = out @ params["wo"].astype(cfg.compute_dtype)
+    return shard(out, "batch", None, None), new_cache
+
+
+def _update_cache(buf, new, slot):
+    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), (0, slot, 0, 0))
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (swiglu / gelu / squared-relu)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "w_in": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (f, d)) * s_out).astype(dtype),
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(params, x, cfg):
+    h = x @ params["w_in"].astype(cfg.compute_dtype)
+    h = shard(h, "batch", None, "model")
+    if cfg.act == "swiglu":
+        g = x @ params["w_gate"].astype(cfg.compute_dtype)
+        g = shard(g, "batch", None, "model")
+        h = jax.nn.silu(g) * h
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.act == "relu2":  # Nemotron-4 squared ReLU
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        raise ValueError(f"unknown activation {cfg.act}")
+    out = h @ params["w_out"].astype(cfg.compute_dtype)
+    return shard(out, "batch", None, None)

@@ -1,0 +1,241 @@
+"""Token-choice top-k Mixture-of-Experts with capacity buckets.
+
+Dispatch is the sort-free "scatter into per-expert capacity buckets" pattern:
+tokens are replicated ``top_k`` times, bucketed into an ``(E, capacity, D)``
+buffer (overflow dropped), processed by a batched per-expert SwiGLU, and
+combined back with a gather-free slot->token segment-sum.
+
+Two execution paths, one math:
+
+* **Pure GSPMD** (serving, single-device tests): expert dim sharded over
+  'model' (expert parallelism) when divisible, else per-expert d_ff
+  (tensor-parallel experts — granite-moe's 40 experts on a 16 axis).
+
+* **Nested manual shard_map over 'model'** whenever the caller is already
+  inside a manual (DIANA-worker) shard_map.  XLA's SPMD partitioner crashes
+  non-deterministically when it must place the data-dependent dispatch
+  scatters next to model-sharded einsums inside a manual subgroup
+  (spmd_partitioner.cc:552 IsManualSubgroup CHECK — see DESIGN.md §6), so
+  under manual axes the WHOLE layer runs fully manual: the (cheap) routing
+  math is replicated per model shard, the expert FFN uses hand-written
+  collectives (EP all-gather / Megatron psum), and the partitioner never
+  sees the region.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .sharding import GSPMDPolicy, NoopPolicy, current_policy, shard, shard_forced, sharding_policy
+
+__all__ = ["init_moe", "moe_layer"]
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    mc = cfg.moe
+    d, f, e = cfg.d_model, mc.d_ff, mc.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * s_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(k2, (e, d, f)) * s_in).astype(dtype),
+        "w_gate": (jax.random.normal(k3, (e, d, f)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k4, (e, f, d)) * s_out).astype(dtype),
+    }
+
+
+def _expert_spec(cfg):
+    """Logical axes of the expert weight tensors, per partition mode."""
+    if cfg.moe.partition == "expert":
+        return ("expert", None, None), ("expert", None, None)
+    return (None, None, "model"), (None, "model", None)  # ffn-partitioned
+
+
+def _dispatch(router, xf, cfg):
+    """Routing + capacity bucketing (gather-free). xf: (T, D)."""
+    mc = cfg.moe
+    t, d = xf.shape
+    e, k = mc.n_experts, mc.top_k
+    cap = max(1, int(mc.capacity_factor * t * k / e))
+
+    logits = (xf.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                                    # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # Switch-style load-balance loss
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce) * mc.aux_loss_weight
+
+    flat_e = top_e.reshape(-1)                                                # (T*k,)
+    flat_w = top_p.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    eo = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(eo, axis=0) * eo, axis=-1) - 1                   # pos within expert
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)
+
+    xf_rep = jnp.repeat(xf.astype(cfg.compute_dtype), k, axis=0)              # == xf[tok_idx]
+    buf = jnp.zeros((e * cap + 1, d), cfg.compute_dtype).at[slot].set(xf_rep)
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    w_eff = jnp.where(keep, flat_w, 0.0).astype(cfg.compute_dtype)
+    tok_slot = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(tok_idx)
+    w_slot = jnp.zeros((e * cap + 1,), cfg.compute_dtype).at[slot].set(w_eff)
+    return buf, tok_slot, w_slot, cap, aux
+
+
+def _combine(y, tok_slot, w_slot, t, d, cfg, *, expert_pin: bool = False):
+    """Gather-free combine: empty slots contribute exactly 0 (bias-free
+    SwiGLU(0) == 0 and their scattered weight is 0).
+
+    ``expert_pin`` keeps the padded slot buffer expert-sharded so the
+    segment-sum partitions into per-shard partial sums + an all-reduce of the
+    (tokens, d) result — top_k*cf x fewer bytes than all-gathering the
+    (E*cap, d) slots (§Perf, same linearity trick as the manual path)."""
+    e_cap = y.shape[0] * y.shape[1]
+    y_pad = jnp.concatenate(
+        [y.reshape(e_cap, d), jnp.zeros((1, d), y.dtype)], axis=0
+    )
+    if expert_pin:
+        y_pad = shard_forced(y_pad, "expert", None)
+    combined = jax.ops.segment_sum(
+        y_pad * w_slot[:, None], tok_slot, num_segments=t + 1
+    )[:t]
+    if expert_pin:
+        combined = shard_forced(combined, None, None)
+    return combined
+
+
+def _swiglu(buf, w_in, w_gate, w_out):
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, w_out)
+
+
+MOE_TOKEN_CHUNK = 16_384  # dispatch-buffer working set: chunk x d x top_k x cf
+
+
+def _moe_chunked(xf, run_chunk, cfg):
+    """Sequentially process token chunks — the dispatch buffers are
+    O(chunk * top_k * capacity_factor * d) instead of O(T * ...): at 1M global
+    tokens the unchunked buffers are 10s-100s of GiB/device.  Each chunk is
+    rematerialised in the backward pass so only ONE chunk's dispatch
+    intermediates are ever live (otherwise the map saves all of them).
+
+    ``cfg.moe.token_chunk`` trades HBM weight-restreaming (every chunk streams
+    all expert weights) against dispatch-buffer memory — a §Perf knob."""
+    t, d = xf.shape
+    chunk = getattr(cfg.moe, "token_chunk", 0) or MOE_TOKEN_CHUNK
+    if t <= chunk or t % chunk:
+        return run_chunk(xf)
+    nc = t // chunk
+    xb = xf.reshape(nc, chunk, d)
+    run_chunk = jax.checkpoint(run_chunk)
+    if getattr(cfg, "scan_unroll", False):
+        outs, auxs = zip(*(run_chunk(xb[i]) for i in range(nc)))
+        return jnp.concatenate(outs, axis=0), sum(auxs) / nc
+    combined, auxs = jax.lax.map(run_chunk, xb)
+    return combined.reshape(t, d), jnp.mean(auxs)
+
+
+def moe_layer(params, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    dtype = cfg.compute_dtype
+
+    pol = current_policy()
+    inner_axes = ()
+    manual_ok = False
+    if isinstance(pol, GSPMDPolicy) and pol.manual and "model" in pol.mesh.axis_names \
+            and "model" not in pol.manual:
+        msize = pol.mesh.shape["model"]
+        expert_mode = mc.partition == "expert" and mc.n_experts % msize == 0
+        ffn_mode = mc.partition == "ffn" and mc.d_ff % msize == 0
+        if expert_mode or ffn_mode:
+            manual_ok = True
+            # go fully manual over EVERY non-worker axis: any remaining auto
+            # axis would put the dispatch scatters back in partitioner hands
+            inner_axes = tuple(a for a in pol.mesh.axis_names if a not in pol.manual)
+
+    w_in = params["w_in"].astype(dtype)
+    w_gate = params["w_gate"].astype(dtype)
+    w_out = params["w_out"].astype(dtype)
+
+    if not manual_ok:
+        # ---- pure GSPMD path ----
+        spec_in, spec_out = _expert_spec(cfg)
+        ex = "expert" if mc.partition == "expert" else None
+        wi = shard(w_in, *spec_in)
+        wg = shard(w_gate, *spec_in)
+        wo = shard(w_out, *spec_out)
+
+        def run_chunk(xc):
+            buf, tok_slot, w_slot, cap, aux = _dispatch(params["router"], xc, cfg)
+            buf = shard_forced(buf, ex, None, None)
+            y = _swiglu(buf, wi, wg, wo)
+            y = shard_forced(y, ex, None, None)
+            return _combine(y, tok_slot, w_slot, xc.shape[0], d, cfg,
+                            expert_pin=ex is not None), aux
+
+        combined, aux = _moe_chunked(xf, run_chunk, cfg)
+        out = combined.reshape(b, s, d).astype(dtype)
+        return shard(out, "batch", None, None), aux
+
+    # ---- nested fully-manual path (inside a DIANA-worker shard_map) ----
+    amesh = jax.sharding.get_abstract_mesh()
+    x_spec = P("data") if "data" in inner_axes else P()
+
+    if mc.partition == "expert":
+        w_specs = (P("model"), P("model"), P("model"))
+
+        def one_chunk(router, wi, wg, wo, xc):
+            buf, tok_slot, w_slot, cap, aux = _dispatch(router, xc, cfg)
+            e_loc = wi.shape[0]                     # experts on this shard
+            eidx = jax.lax.axis_index("model") * e_loc
+            buf_loc = jax.lax.dynamic_slice_in_dim(buf, eidx, e_loc, axis=0)
+            y_loc = _swiglu(buf_loc, wi, wg, wo)
+            y = jax.lax.all_gather(y_loc, "model", axis=0, tiled=True)
+            return _combine(y, tok_slot, w_slot, xc.shape[0], d, cfg), aux
+    else:
+        w_specs = (P(None, None, "model"), P(None, None, "model"), P(None, "model", None))
+
+        def one_chunk(router, wi, wg, wo, xc):
+            buf, tok_slot, w_slot, cap, aux = _dispatch(router, xc, cfg)
+            y_part = _swiglu(buf, wi, wg, wo)       # partial over local F slice
+            # §Perf: combine BEFORE the psum — segment_sum is linear in y, so
+            # psum(combine(y_part)) == combine(psum(y_part)) while moving
+            # (tokens, d) instead of (E*cap, d) = top_k*cf x more bytes
+            # (10x for granite-moe's top-8 @ cf 1.25).
+            combined_part = _combine(y_part, tok_slot, w_slot, xc.shape[0], d, cfg)
+            return jax.lax.psum(combined_part, "model"), aux
+
+    def body(router, wi, wg, wo, xloc):
+        with sharding_policy(NoopPolicy()):
+            combined, aux = _moe_chunked(
+                xloc, lambda xc: one_chunk(router, wi, wg, wo, xc), cfg
+            )
+            if "data" in inner_axes:
+                aux = jax.lax.pmean(aux, "data")
+            return combined, aux
+
+    from jax import shard_map as _shard_map
+
+    combined, aux = _shard_map(
+        body, mesh=amesh,
+        in_specs=(P(),) + w_specs + (x_spec,),
+        out_specs=(x_spec, P()),
+        axis_names=set(inner_axes), check_vma=False,
+    )(params["router"], w_in, w_gate, w_out, xf)
+    out = combined.reshape(b, s, d).astype(dtype)
+    return out, aux

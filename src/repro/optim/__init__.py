@@ -1,0 +1,18 @@
+"""Optimizers: inner rules, schedules, and the DIANA wrapper."""
+
+from .optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adamw,
+    constant_schedule,
+    diana_decreasing_schedule,
+    warmup_cosine_schedule,
+)
+from .diana_optimizer import DianaOptimizer, DianaOptState
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adamw",
+    "constant_schedule", "diana_decreasing_schedule", "warmup_cosine_schedule",
+    "DianaOptimizer", "DianaOptState",
+]

@@ -1,0 +1,110 @@
+"""Inner optimizers + learning-rate schedules (no external deps).
+
+An optimizer is a pair of pure functions, optax-style:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, lr)
+
+``updates`` are *descent directions already scaled by lr* — the caller applies
+``x <- prox_{lr R}(x + updates)``.  Keeping lr a call-time argument (not baked
+into the state) lets DIANA's decreasing-stepsize schedule (Thm 3) and the
+prox coupling ``gamma = lr`` stay exact.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adamw",
+    "constant_schedule", "diana_decreasing_schedule", "warmup_cosine_schedule",
+]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return _tmap(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    """Heavy-ball momentum — Algorithm 1's ``v^k = beta v^{k-1} + ghat^k``."""
+
+    def init(params):
+        return _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, v, params, lr):
+        v = _tmap(lambda v0, g: beta * v0 + g.astype(jnp.float32), v, grads)
+        return _tmap(lambda vv: -lr * vv, v), v
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=_tmap(z, params), nu=_tmap(z, params), count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = _tmap(lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, n, p):
+            step = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        return _tmap(upd, mu, nu, params), AdamState(mu=mu, nu=nu, count=c)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Schedules — callables step -> lr
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def diana_decreasing_schedule(mu: float, theta: float):
+    """Theorem 3/5: gamma^k = 2 / (mu*k + theta) — O(1/k) to the exact optimum."""
+    return lambda step: 2.0 / (mu * step.astype(jnp.float32) + theta)
+
+
+def warmup_cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return f

@@ -1,0 +1,61 @@
+"""Checkpoint save/restore tests (bf16, nesting, atomicity, errors)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def _tree():
+    return {
+        "params": {
+            "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": jnp.ones((2,), jnp.bfloat16) * 1.5,
+        },
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": [jnp.zeros((2, 2)), (jnp.ones(3, jnp.int8),)],
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 42, tree)
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 42
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32) if a.dtype == jnp.bfloat16 else np.asarray(a),
+                                      np.asarray(b, np.float32) if b.dtype == jnp.bfloat16 else np.asarray(b))
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(2)})
+    save_checkpoint(str(tmp_path), 5, {"x": jnp.zeros(2)})
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), {"x": jnp.zeros(2)})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(2)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"x": jnp.zeros(3)})
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(2)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), {"x": jnp.zeros(2), "y": jnp.zeros(1)})
+
+
+def test_no_tmp_litter(tmp_path):
+    save_checkpoint(str(tmp_path), 3, _tree())
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]

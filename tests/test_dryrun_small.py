@@ -1,0 +1,35 @@
+"""Exercise the dry-run machinery end-to-end on a small 8-device mesh in a
+subprocess (the production 512-device run happens out-of-band via
+``python -m repro.launch.dryrun --all --multi-pod both``)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("mamba2-130m", "decode_32k"),
+    ("llama3.2-1b", "long_500k"),
+])
+def test_dryrun_small_mesh(arch, shape, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    # dryrun sets its own XLA_FLAGS (512 devices) internally; --devices shrinks
+    # only the mesh, which is exactly what we want to exercise here.
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape,
+         "--devices", "8", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    path = tmp_path / "singlepod" / f"{arch}_{shape}.json"
+    res = json.loads(path.read_text())
+    assert res["status"] == "ok", res
+    assert res["per_device"]["hlo_flops"] > 0
+    assert set(res["roofline"]) >= {"compute_s", "memory_s", "collective_s", "dominant"}

@@ -1,0 +1,44 @@
+"""2-bit packing roundtrip tests."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PACK_FACTOR, pack2bit, packed_nbytes, unpack2bit
+
+
+def test_roundtrip_exhaustive_byte():
+    """All 3^4 = 81 valid sign nibbles roundtrip through one byte."""
+    combos = np.array(list(itertools.product([-1, 0, 1], repeat=4)), dtype=np.int8)
+    packed = pack2bit(jnp.asarray(combos))
+    assert packed.shape == (81, 1) and packed.dtype == jnp.uint8
+    back = unpack2bit(packed)
+    np.testing.assert_array_equal(np.asarray(back), combos)
+
+
+@pytest.mark.parametrize("shape", [(8,), (3, 16), (2, 5, 64), (1, 128)])
+def test_roundtrip_random(shape):
+    rng = np.random.default_rng(0)
+    signs = rng.integers(-1, 2, size=shape).astype(np.int8)
+    back = unpack2bit(pack2bit(jnp.asarray(signs)))
+    np.testing.assert_array_equal(np.asarray(back), signs)
+
+
+def test_compression_ratio():
+    assert packed_nbytes(1024) == 256
+    assert packed_nbytes(1) == 1
+    assert PACK_FACTOR == 4
+
+
+def test_rejects_unaligned():
+    with pytest.raises(ValueError):
+        pack2bit(jnp.zeros((7,), jnp.int8))
+
+
+def test_unpack_trim():
+    signs = jnp.asarray(np.tile([1, -1, 0, 1], 4).astype(np.int8))
+    packed = pack2bit(signs)
+    assert unpack2bit(packed, n=10).shape == (10,)

@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (
+    CompressionConfig,
+    alpha_p,
+    dequantize_blocks,
+    expected_sparsity,
+    lp_norm,
+    pack2bit,
+    quantization_variance,
+    quantize_blocks,
+    unpack2bit,
+)
+
+FINITE = dict(allow_nan=False, allow_infinity=False, width=32)
+
+
+@given(hnp.arrays(np.int8, hnp.array_shapes(min_dims=1, max_dims=3, min_side=4, max_side=64),
+                  elements=st.integers(-1, 1)))
+@settings(max_examples=100, deadline=None)
+def test_pack_roundtrip(signs):
+    last = signs.shape[-1]
+    trim = last - (last % 4)
+    if trim == 0:
+        return
+    s = jnp.asarray(signs[..., :trim])
+    np.testing.assert_array_equal(np.asarray(unpack2bit(pack2bit(s))), np.asarray(s))
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 300),
+                  elements=st.floats(-1e3, 1e3, **FINITE)))
+@settings(max_examples=100, deadline=None)
+def test_norm_ordering(x):
+    """||x||_1 >= ||x||_2 >= ||x||_inf — the inequality DIANA's theory rests on."""
+    xj = jnp.asarray(x)
+    n1, n2, ni = (float(lp_norm(xj, p)) for p in (1, 2, math.inf))
+    assert n1 >= n2 - 1e-3 * max(n1, 1)
+    assert n2 >= ni - 1e-3 * max(n2, 1)
+
+
+@given(hnp.arrays(np.float32, st.integers(2, 200),
+                  elements=st.floats(-100, 100, **FINITE).filter(
+                      lambda v: v == 0 or abs(v) > 1e-6)),
+       st.sampled_from([1.0, 2.0, math.inf]))
+@settings(max_examples=100, deadline=None)
+def test_alpha_p_is_lower_bound(x, p):
+    """alpha_p(d) <= ||x||_2^2 / (||x||_1 ||x||_p) for every nonzero x (eq. 12).
+
+    Magnitudes bounded away from subnormals: x^2 underflowing to 0 in f32
+    breaks the exact-arithmetic inequality, which is not what we test."""
+    xj = jnp.asarray(x)
+    n1, np_, n2sq = float(lp_norm(xj, 1)), float(lp_norm(xj, p)), float(jnp.sum(xj * xj))
+    if n1 == 0 or np_ == 0 or n2sq == 0:
+        return
+    assert alpha_p(p, len(x)) <= n2sq / (n1 * np_) * (1 + 1e-4) + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([2.0, math.inf]),
+       st.sampled_from([16, 64, 256]))
+@settings(max_examples=50, deadline=None)
+def test_quantized_support(seed, p, block):
+    """Every quantized coordinate is in {-scale_l, 0, +scale_l} of its block,
+    and signs never flip (eq. 5)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (block * 3,)) * 10
+    q = quantize_blocks(x, jax.random.fold_in(key, 1), p=p, block_size=block)
+    signs = np.asarray(q.signs)
+    assert set(np.unique(signs)) <= {-1, 0, 1}
+    xb = np.asarray(x).reshape(3, block)
+    agree = np.sign(xb) == signs
+    assert np.all(agree | (signs == 0))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_variance_decreasing_in_p(seed):
+    """Lemma 2: Psi is decreasing in p — p=inf has minimal variance."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    v1 = float(quantization_variance(x, 1.0, 64))
+    v2 = float(quantization_variance(x, 2.0, 64))
+    vi = float(quantization_variance(x, math.inf, 64))
+    assert v1 >= v2 - 1e-4 and v2 >= vi - 1e-4
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_sparsity_increasing_in_p(seed):
+    """Theorem 1: E||qhat||_0 = ||x||_1/||x||_p increases with p."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    s2 = float(expected_sparsity(x, 2.0, 256))
+    si = float(expected_sparsity(x, math.inf, 256))
+    assert si >= s2 - 1e-4
+
+
+@given(st.sampled_from(["diana", "qsgd", "terngrad", "dqgd", "none"]),
+       st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_compression_config_consistency(method, seed):
+    cfg = CompressionConfig(method=method, block_size=64)
+    a = cfg.effective_alpha()
+    assert (a > 0) == (method == "diana")
+    if method == "qsgd":
+        assert cfg.effective_p() == 2.0
+    if method == "terngrad":
+        assert cfg.effective_p() == math.inf
+    assert 0 < cfg.theory_alpha_p() <= 1.0

@@ -1,0 +1,78 @@
+"""Proximal operator tests: closed forms vs numerical argmin, nonexpansiveness
+(paper eq. 9), and tree mapping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import prox
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _numeric_prox(value_fn, u, gamma, lo=-10, hi=10, n=400_001):
+    """Brute-force argmin_v gamma*R(v) + 0.5 (v-u)^2 on a grid (scalar)."""
+    v = np.linspace(lo, hi, n)
+    obj = gamma * value_fn(v) + 0.5 * (v - u) ** 2
+    return v[np.argmin(obj)]
+
+
+@pytest.mark.parametrize("u", [-3.0, -0.1, 0.0, 0.4, 2.5])
+def test_l1_matches_numeric(u):
+    lam, gamma = 0.7, 0.5
+    r = prox.l1(lam)
+    got = float(r.prox(jnp.asarray(u), gamma))
+    want = _numeric_prox(lambda v: lam * np.abs(v), u, gamma)
+    assert got == pytest.approx(want, abs=1e-4)
+
+
+@pytest.mark.parametrize("u", [-2.0, 0.3, 5.0])
+def test_l2_matches_numeric(u):
+    lam, gamma = 1.3, 0.25
+    r = prox.l2(lam)
+    got = float(r.prox(jnp.asarray(u), gamma))
+    want = _numeric_prox(lambda v: 0.5 * lam * v * v, u, gamma)
+    assert got == pytest.approx(want, abs=1e-4)
+
+
+def test_elastic_net_reduces():
+    en = prox.elastic_net(0.5, 0.0)
+    l1 = prox.l1(0.5)
+    u = jax.random.normal(KEY, (64,))
+    np.testing.assert_allclose(np.asarray(en.prox(u, 0.3)), np.asarray(l1.prox(u, 0.3)))
+
+
+def test_box_projection():
+    r = prox.box_indicator(-1.0, 1.0)
+    u = jnp.asarray([-5.0, -0.5, 0.0, 0.9, 3.0])
+    np.testing.assert_allclose(np.asarray(r.prox(u, 17.0)), [-1, -0.5, 0, 0.9, 1])
+
+
+def test_nonneg():
+    r = prox.nonneg_indicator()
+    u = jnp.asarray([-2.0, 0.0, 3.0])
+    np.testing.assert_allclose(np.asarray(r.prox(u, 1.0)), [0, 0, 3])
+
+
+@pytest.mark.parametrize("make", [
+    lambda: prox.l1(0.7), lambda: prox.l2(2.0),
+    lambda: prox.elastic_net(0.3, 0.4), lambda: prox.box_indicator(-2, 2),
+])
+def test_nonexpansive(make):
+    """||prox(u) - prox(v)|| <= ||u - v|| (paper eq. 9)."""
+    r = make()
+    k1, k2 = jax.random.split(KEY)
+    u = jax.random.normal(k1, (128,)) * 3
+    v = jax.random.normal(k2, (128,)) * 3
+    d_out = float(jnp.linalg.norm(r.prox(u, 0.7) - r.prox(v, 0.7)))
+    d_in = float(jnp.linalg.norm(u - v))
+    assert d_out <= d_in + 1e-6
+
+
+def test_tree_prox_and_value():
+    r = prox.l1(1.0)
+    tree = {"a": jnp.asarray([3.0, -0.2]), "b": jnp.asarray([[0.5]])}
+    out = r.tree_prox(tree, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), [2.0, 0.0])
+    assert float(r.tree_value(tree)) == pytest.approx(3.7)
