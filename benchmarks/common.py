@@ -34,8 +34,8 @@ def timed(fn: Callable, *args, reps: int = 3) -> float:
 
 
 def run_logreg(method: str, p: float, *, steps: int, gamma: float, block: int,
-               beta: float = 0.0, alpha=None, l1=0.0, n_workers: int = 10,
-               seed: int = 0, problem=None):
+               beta: float = 0.0, alpha=None, k: int = 64, l1=0.0,
+               n_workers: int = 10, seed: int = 0, problem=None):
     """Distributed (reference-simulated) regularized logistic regression.
 
     Returns dict with loss trajectory, final distance to x*, sparsity stats.
@@ -60,7 +60,7 @@ def run_logreg(method: str, p: float, *, steps: int, gamma: float, block: int,
         return float(jnp.mean(jnp.log1p(jnp.exp(-z))) + 0.5 * l2 * w @ w
                      + reg.tree_value({"w": w}))
 
-    cfg = CompressionConfig(method=method, p=p, block_size=block, alpha=alpha)
+    cfg = CompressionConfig(method=method, p=p, block_size=block, alpha=alpha, k=k)
     params = {"x": jnp.zeros((prob.dim,))}
     state = reference_init(params, cfg, prob.n_workers)
     key = jax.random.PRNGKey(seed)

@@ -2,6 +2,7 @@
 
 Prints the required ``name,us_per_call,derived`` CSV.  Modules:
 
+  bench_compressors     Fig. 1 extended   bits/dim vs suboptimality, all operators
   bench_convergence     Fig. 1 / Fig. 3   DIANA vs QSGD/TernGrad/DQGD/SGD
   bench_norm_power      Tab. 3 / Cor. 1   iteration complexity vs p
   bench_blocksize       Tab. 4 / Fig. 5   optimal bucket sizes per norm
@@ -23,6 +24,7 @@ import time
 import traceback
 
 MODULES = [
+    "bench_compressors",
     "bench_convergence",
     "bench_norm_power",
     "bench_blocksize",

@@ -31,9 +31,10 @@ def main():
     params, opt_state, _ = init_train_state(cfg, opt, mesh, key)
     step_fn = build_train_step(cfg, opt, mesh, shape)
 
+    comp = opt.compressor  # registry-resolved operator instance
     print(f"model: {cfg.name}  params: {count_params(params):,}")
-    print(f"compressor: {opt.compression.method} p={opt.compression.p} "
-          f"block={opt.compression.block_size} "
+    print(f"compressor: {opt.compression.method} -> {comp.name} "
+          f"(unbiased={comp.unbiased}, memory={comp.carries_state}) "
           f"-> {payload_bits_per_dim(opt.compression):.2f} bits/dim "
           f"(vs 32 uncompressed)")
 

@@ -89,9 +89,10 @@ class ModelConfig:
                                    # required under >1 manual mesh axes, see train.py)
     attn_q_chunk: int = 2048       # query-chunked attention above this seq len
     # --- DIANA / training defaults (overridable from the CLI) ---
-    compression: str = "diana"
+    compression: str = "diana"     # any repro.core.compressors registry name/alias
     comp_p: float = math.inf
     comp_block: int = 2048
+    comp_k: int = 64               # kept coordinates for rand-k / top-k
     comp_worker_axes: Tuple[str, ...] = ("pod", "data")
     h_dtype: Any = jnp.float32
 

@@ -13,6 +13,12 @@ from .quantization import (
 )
 from .packing import pack2bit, unpack2bit, packed_nbytes, PACK_FACTOR
 from .compression import CompressionConfig, compress_tree, decompress_tree, payload_bits_per_dim
+from .compressors import (
+    Compressor,
+    Payload,
+    available_methods,
+    make_compressor,
+)
 from .diana import (
     DianaState,
     init_state,
@@ -28,6 +34,7 @@ __all__ = [
     "quantize_pytree", "dequantize_pytree", "expected_sparsity", "quantization_variance",
     "pack2bit", "unpack2bit", "packed_nbytes", "PACK_FACTOR",
     "CompressionConfig", "compress_tree", "decompress_tree", "payload_bits_per_dim",
+    "Compressor", "Payload", "available_methods", "make_compressor",
     "DianaState", "init_state", "aggregate_shardmap", "reference_init", "reference_step",
     "tree_zeros_like", "prox",
 ]

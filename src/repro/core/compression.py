@@ -1,85 +1,104 @@
-"""Compression policies: DIANA, QSGD, TernGrad, DQGD, none.
+"""Compression configuration — a thin, serializable factory over the
+compressor registry.
 
-A policy decides *what* is quantized (gradient vs gradient difference) and how
-the worker memory evolves.  QSGD / TernGrad / DQGD are exactly the paper's
-Algorithm 2 special cases (alpha = 0, h = 0) with p = 2 / p = inf respectively;
-DQGD compresses the gradient directly with memory disabled as in Khirirat et
-al. 2018.  This unification mirrors Sec. 3 "Relation to QSGD and TernGrad".
+The actual operators live in :mod:`repro.core.compressors`; this module keeps
+the flat dataclass surface the configs / CLI / checkpoints use, resolves a
+``method`` string (canonical name or legacy alias) through the registry, and
+preserves the historic helper API (``compress_tree`` / ``decompress_tree`` /
+``payload_bits_per_dim``) as thin delegations.
+
+Legacy method strings remain first-class aliases: ``diana`` / ``qsgd`` /
+``terngrad`` / ``dqgd`` / ``none`` are exactly the paper's Algorithm 1 /
+Algorithm 2 special cases (Sec. 3 "Relation to QSGD and TernGrad"), now
+expressed as registry entries over the ternary/identity operators.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .quantization import (
-    QuantizedBlocks,
-    alpha_p,
-    dequantize_pytree,
-    quantize_pytree,
-)
-from .packing import pack2bit, unpack2bit
+from .compressors import Payload, make_compressor
+from .compressors.registry import available_methods, canonical_name
+from .compressors.ternary import TernaryCompressor
+from .quantization import QuantizedBlocks, alpha_p
+from .packing import unpack2bit
 
-__all__ = ["CompressionConfig", "compress_tree", "decompress_tree", "payload_bits_per_dim"]
-
-_METHODS = ("diana", "qsgd", "terngrad", "dqgd", "none")
+__all__ = [
+    "CompressionConfig",
+    "compress_tree",
+    "decompress_tree",
+    "payload_bits_per_dim",
+]
 
 
 @dataclass(frozen=True)
 class CompressionConfig:
     """Configuration of the gradient-communication compressor.
 
-    method:      one of diana | qsgd | terngrad | dqgd | none
-    p:           quantization norm power (2.0 or math.inf analysed by the paper)
-    block_size:  bucket size d_l for block quantization (Def. 2). Paper guidance:
-                 blocks of size ~ n^2 match uncompressed SGD iteration complexity.
-    alpha:       memory learning rate. None -> theory default alpha_p/2 (Cor. 1);
-                 the experiments' practical choice is 1/sqrt(block_size).
-    h_dtype:     dtype of the DIANA memory h_i (f32 default; bf16 for >10B models)
-    worker_axes: mesh axes whose product forms the DIANA worker set. ('pod','data')
-                 = paper-faithful every-slice-a-worker; ('pod',) = hierarchical
-                 beyond-paper mode (psum inside pod, compress across pods).
+    method:      any registered compressor name or alias (see
+                 :mod:`repro.core.compressors.registry`): ternary | natural |
+                 randk | topk_ef | identity, or the legacy diana | qsgd |
+                 terngrad | dqgd | none.
+    p:           quantization norm power for the ternary family (2.0 or
+                 math.inf analysed by the paper).
+    block_size:  bucket size d_l for block quantization (Def. 2). Paper
+                 guidance: blocks of size ~ n^2 match uncompressed SGD
+                 iteration complexity.
+    alpha:       memory learning rate override. None -> the operator's theory
+                 default (ternary: alpha_p/2 per Cor. 1; natural: 8/9;
+                 rand-k: k/d).
+    k:           coordinates kept per parameter leaf by the sparsifying
+                 operators (rand-k / top-k).
+    h_dtype:     dtype of the DIANA memory h_i (f32 default; bf16 >10B).
+    worker_axes: mesh axes whose product forms the DIANA worker set.
+    use_kernel:  Pallas-kernel capability for kernel-backed operators.
+                 None = auto (kernels on TPU, pure-jnp elsewhere).
     """
 
     method: str = "diana"
     p: float = math.inf
     block_size: int = 2048
     alpha: Optional[float] = None
+    k: int = 64
     h_dtype: Any = jnp.float32
     worker_axes: tuple = ("pod", "data")
-    use_kernel: bool = False  # route quantize+pack through the Pallas kernel
+    use_kernel: Optional[bool] = None
 
     def __post_init__(self):
-        if self.method not in _METHODS:
-            raise ValueError(f"unknown compression method {self.method!r}; choose from {_METHODS}")
+        canonical_name(self.method)  # raises on unknown methods
         if self.block_size % 4:
             raise ValueError("block_size must be a multiple of 4 for 2-bit packing")
 
+    # ------------------------------------------------------------- factory
+
+    def make(self):
+        """Build the configured :class:`~repro.core.compressors.Compressor`."""
+        return make_compressor(self)
+
+    # ----------------------------------------------- legacy introspection
+
     @property
     def uses_memory(self) -> bool:
-        return self.method == "diana"
+        """Whether worker memories h_i are live state for this operator."""
+        return self.make().carries_state
 
     @property
     def quantizes(self) -> bool:
-        return self.method != "none"
+        return canonical_name(self.method) != "identity"
 
     def effective_p(self) -> float:
-        if self.method == "qsgd":
-            return 2.0
-        if self.method == "terngrad":
-            return math.inf
-        return self.p
+        comp = self.make()
+        return comp.p if isinstance(comp, TernaryCompressor) else self.p
 
     def effective_alpha(self) -> float:
-        if not self.uses_memory:
-            return 0.0
-        if self.alpha is not None:
-            return self.alpha
-        return alpha_p(self.effective_p(), self.block_size) / 2.0  # Corollary 1
+        """The operator's memory rate (0 for memoryless); sparse operators
+        resolve their per-leaf d at use time, this is the d-free default."""
+        return self.make().memory_alpha()
 
     def theory_alpha_p(self) -> float:
         """alpha_p(d~) of the largest block — drives every rate in the paper."""
@@ -87,47 +106,50 @@ class CompressionConfig:
 
 
 # ---------------------------------------------------------------------------
-# Tree-level compress/decompress with packed payloads
+# Tree-level helpers over the compressor interface
 # ---------------------------------------------------------------------------
 
 def compress_tree(tree, key, cfg: CompressionConfig):
-    """Quantize a gradient(-difference) pytree into a packed payload.
+    """Compress a gradient(-difference) pytree leaf-by-leaf.
 
-    Returns ``(payload, qtree)`` where ``payload`` is the communicated pytree of
-    ``{"packed": uint8, "scales": f32}`` dicts and ``qtree`` the local ternary
-    representation (for the worker's own h update without a second unpack).
+    Returns ``(payload_tree, local_tree)``: ``payload_tree`` has one
+    :class:`Payload` per leaf (the communicated wire format);
+    ``local_tree`` is the worker's own decode-ready representation —
+    :class:`QuantizedBlocks` for the ternary family (back-compat with the
+    sparsity/variance benchmarks), the payload itself otherwise.
     """
-    if cfg.use_kernel:
-        from repro.kernels import ops as _kops
-
-        return _kops.compress_tree_kernel(tree, key, cfg)
-    qtree = quantize_pytree(tree, key, p=cfg.effective_p(), block_size=cfg.block_size)
-    payload = jax.tree_util.tree_map(
-        lambda q: {"packed": pack2bit(q.signs), "scales": q.scales},
-        qtree,
-        is_leaf=lambda t: isinstance(t, QuantizedBlocks),
+    comp = cfg.make()
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    payloads, locals_ = [], []
+    for leaf, k in zip(leaves, keys):
+        pay = comp.compress(leaf.reshape(-1).astype(jnp.float32), k)
+        payloads.append(pay)
+        if isinstance(comp, TernaryCompressor):
+            locals_.append(QuantizedBlocks(signs=unpack2bit(pay.packed), scales=pay.scales))
+        else:
+            locals_.append(pay)
+    return (
+        jax.tree_util.tree_unflatten(treedef, payloads),
+        jax.tree_util.tree_unflatten(treedef, locals_),
     )
-    return payload, qtree
 
 
 def decompress_tree(payload, like, cfg: CompressionConfig):
-    """Unpack a payload pytree back to dense leaves shaped like ``like``."""
+    """Decode a payload pytree back to dense leaves shaped like ``like``."""
+    comp = cfg.make()
     like_leaves, treedef = jax.tree_util.tree_flatten(like)
-    pay_leaves = [
-        p for p in jax.tree_util.tree_leaves(
-            payload, is_leaf=lambda t: isinstance(t, dict) and "packed" in t
-        )
+    pay_leaves = jax.tree_util.tree_leaves(
+        payload, is_leaf=lambda t: isinstance(t, Payload)
+    )
+    outs = [
+        comp.decode(pay, l.size).astype(l.dtype).reshape(l.shape)
+        for pay, l in zip(pay_leaves, like_leaves)
     ]
-    outs = []
-    for pay, l in zip(pay_leaves, like_leaves):
-        signs = unpack2bit(pay["packed"])                       # (m, B)
-        dense = signs.astype(l.dtype) * pay["scales"][:, None].astype(l.dtype)
-        outs.append(dense.reshape(-1)[: l.size].reshape(l.shape))
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
-def payload_bits_per_dim(cfg: CompressionConfig) -> float:
-    """Communication cost per coordinate: 2 bits + per-block f32 scale."""
-    if not cfg.quantizes:
-        return 32.0
-    return 2.0 + 32.0 / cfg.block_size
+def payload_bits_per_dim(cfg: CompressionConfig, d: Optional[int] = None) -> float:
+    """Communication cost per coordinate of the configured operator (``d`` is
+    required for honest accounting of the sparse index+value payloads)."""
+    return cfg.make().bits_per_dim(d)

@@ -1,0 +1,27 @@
+"""Pluggable compression operators behind DIANA's aggregation loop.
+
+``Payload`` is the single wire format; ``Compressor`` the interface; the
+registry maps ``CompressionConfig.method`` strings (including the legacy
+diana/qsgd/terngrad/dqgd/none aliases) to operator instances.
+"""
+
+from .base import Compressor, Payload, payload_nbits
+from .identity import IdentityCompressor
+from .natural import NaturalCompressor
+from .randk import RandKCompressor
+from .registry import (
+    alias,
+    available_methods,
+    canonical_name,
+    make_compressor,
+    register,
+)
+from .ternary import TernaryCompressor
+from .topk_ef import TopKEFCompressor
+
+__all__ = [
+    "Compressor", "Payload", "payload_nbits",
+    "TernaryCompressor", "NaturalCompressor", "RandKCompressor",
+    "TopKEFCompressor", "IdentityCompressor",
+    "register", "alias", "make_compressor", "canonical_name", "available_methods",
+]

@@ -1,0 +1,147 @@
+"""Compressor interface + the unified ``Payload`` wire format.
+
+A :class:`Compressor` owns everything DIANA's Algorithm 1 needs to know about
+one compression operator:
+
+* the **wire format** — :meth:`compress` produces a :class:`Payload`, the one
+  pytree-of-arrays container every transport (reference simulation, shard_map
+  all-gather, Pallas kernels) moves and decodes;
+* the **decode** — :meth:`decode` (one worker) and :meth:`decode_sum` (the
+  server-side sum over gathered workers, overridable with a fused kernel);
+* the **memory rule** — how the worker/server memories ``h_i`` / ``h`` evolve
+  (:meth:`compress_input`, :meth:`next_memory`, :meth:`next_server_memory`,
+  :meth:`server_direction`).  The base class implements the paper's
+  ``h^{k+1} = h^k + alpha * dhat^k`` gated on :attr:`carries_state`; biased
+  operators (top-k) override these hooks with error feedback.
+* the **accounting** — :meth:`bits_per_dim` drives the communication-cost
+  benchmarks and :func:`repro.core.compression.payload_bits_per_dim`.
+
+All hooks operate on FLAT per-leaf f32 vectors; pytree plumbing, dtype casts
+and sharding of the memories stay in :mod:`repro.core.diana`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Payload", "Compressor", "payload_nbits"]
+
+
+class Payload(NamedTuple):
+    """The single wire format shared by every compressor and transport.
+
+    A fixed-field NamedTuple (hence a jax pytree: jit/vmap/all_gather safe)
+    where each compressor populates the fields its encoding needs and leaves
+    the rest ``None`` (``None`` children flatten away, so gathered payloads
+    carry no dead traffic):
+
+    packed:   bit-packed codes — 2-bit ternary nibbles (ternary family) or
+              sign+exponent codes (natural compression)
+    scales:   per-block norm scales (ternary family)
+    indices:  coordinate indices of a sparse payload (rand-k / top-k)
+    values:   dense values (identity) or sparse coefficients (rand-k / top-k)
+    """
+
+    packed: Optional[jax.Array] = None
+    scales: Optional[jax.Array] = None
+    indices: Optional[jax.Array] = None
+    values: Optional[jax.Array] = None
+
+    def select(self, i) -> "Payload":
+        """The ``i``-th worker's payload from a stacked/gathered payload."""
+        return Payload(*(None if f is None else f[i] for f in self))
+
+
+def payload_nbits(payload: Payload) -> int:
+    """Container bits of one payload (upper bound on the logical wire cost)."""
+    return sum(
+        f.size * f.dtype.itemsize * 8 for f in payload if f is not None
+    )
+
+
+class Compressor:
+    """Abstract compression operator behind the DIANA aggregation loop.
+
+    Subclasses must implement :meth:`compress`, :meth:`decode` and
+    :meth:`bits_per_dim`; everything else has a default.  Class attributes:
+
+    name:           registry identifier
+    unbiased:       ``E[decode(compress(x))] == x`` (enables the DIANA memory
+                    loop and the paper's convergence theory)
+    carries_state:  whether the worker memories ``h_i`` are live state (the
+                    alpha-memory rule, or an error-feedback residual)
+    use_kernel:     this instance routes its hot paths through Pallas kernels
+                    (a capability the compressor itself advertises — consumers
+                    never switch on an external flag)
+    prefers_allreduce: the payload IS the dense vector and no state is
+                    carried, so a distributed mean should lower to one fused
+                    all-reduce (pmean) instead of gather + decode.  The
+                    identity baseline sets this; the reference simulation
+                    still sums sequentially, so identity (alone) is exempt
+                    from the bitwise reference/distributed contract.
+    """
+
+    name: str = "abstract"
+    unbiased: bool = True
+    carries_state: bool = False
+    use_kernel: bool = False
+    prefers_allreduce: bool = False
+
+    # ---------------------------------------------------------------- wire
+
+    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
+        """Encode a flat f32 vector ``delta`` into a :class:`Payload`."""
+        raise NotImplementedError
+
+    def decode(self, payload: Payload, d: int) -> jax.Array:
+        """Decode ONE worker's payload back to a flat f32 vector of length d."""
+        raise NotImplementedError
+
+    def decode_sum(self, gathered: Payload, n: int, d: int) -> jax.Array:
+        """``sum_i decode(payload_i)`` from a gathered payload (leading worker
+        axis of size ``n`` on every field).
+
+        Default: sequential accumulate in f32 — peak memory of one dense
+        vector, and a deterministic summation order the distributed and
+        reference paths share bitwise.  Kernel-backed compressors override
+        this with a fused unpack+reduce.
+        """
+        acc = self.decode(gathered.select(0), d)
+        for i in range(1, n):
+            acc = acc + self.decode(gathered.select(i), d)
+        return acc
+
+    def bits_per_dim(self, d: Optional[int] = None) -> float:
+        """Logical wire cost per coordinate (``d`` = vector length, needed by
+        sparse payloads whose relative cost depends on it)."""
+        raise NotImplementedError
+
+    # -------------------------------------------------------- memory rule
+
+    def memory_alpha(self, d: Optional[int] = None) -> float:
+        """Learning rate of the alpha-memory rule; 0 for memoryless."""
+        return 0.0
+
+    def compress_input(self, g: jax.Array, h: jax.Array) -> jax.Array:
+        """What the worker encodes: the gradient difference ``g - h`` when the
+        memory is live (Algorithm 1 line 5), else the gradient itself."""
+        return g - h if self.carries_state else g
+
+    def next_memory(self, h: jax.Array, dhat: jax.Array, delta: jax.Array) -> jax.Array:
+        """Worker memory update ``h_i^{k+1}`` (Algorithm 1 line 6)."""
+        if not self.carries_state:
+            return h
+        return h + self.memory_alpha(h.shape[-1]) * dhat
+
+    def next_server_memory(self, h: jax.Array, dhat_mean: jax.Array) -> jax.Array:
+        """Server memory update ``h^{k+1}`` (Algorithm 1 line 9)."""
+        if not self.carries_state:
+            return h
+        return h + self.memory_alpha(h.shape[-1]) * dhat_mean
+
+    def server_direction(self, h: jax.Array, dhat_mean: jax.Array) -> jax.Array:
+        """The aggregated estimator ``ghat^k`` (Algorithm 1 line 8)."""
+        return h + dhat_mean if self.carries_state else dhat_mean

@@ -1,0 +1,35 @@
+"""Identity "compressor" — uncompressed f32 baseline (method "none").
+
+Ships the dense vector in ``Payload.values``.  Running the baseline through
+the same compress -> gather -> decode_sum pipeline as every real operator
+keeps the aggregation loop branch-free and makes the 32-bits/dim row of the
+trade-off benchmarks an honest apples-to-apples measurement.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Compressor, Payload
+
+__all__ = ["IdentityCompressor"]
+
+
+class IdentityCompressor(Compressor):
+    name = "identity"
+    unbiased = True
+    carries_state = False
+    prefers_allreduce = True  # dense payload: one pmean beats gather+decode
+
+    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
+        del key
+        return Payload(values=delta.astype(jnp.float32))
+
+    def decode(self, payload: Payload, d: int) -> jax.Array:
+        return payload.values[:d]
+
+    def bits_per_dim(self, d: Optional[int] = None) -> float:
+        return 32.0

@@ -1,0 +1,67 @@
+"""Rand-k sparsification — unbiased random coordinate subsampling.
+
+Picks ``k`` coordinates uniformly without replacement and rescales by ``d/k``,
+giving the unbiased estimator ``(d/k) * sum_{j in S} x_j e_j`` with variance
+bound ``omega = d/k - 1``.  Wire format: ``indices`` (int32) + ``values``
+(f32) — ``64k/d`` bits/dim.
+
+The values travel UNscaled; the ``d/k`` correction is applied at decode where
+``d`` is known, so the same payload is valid for any transport.  Default
+memory rate ``alpha = 1/(1 + omega) = k/d`` (per leaf) plugs the operator into
+DIANA's memory loop as in Horvath et al. 2019 (arXiv:1904.05115).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Compressor, Payload
+
+__all__ = ["RandKCompressor"]
+
+
+class RandKCompressor(Compressor):
+    name = "randk"
+    unbiased = True
+
+    def __init__(self, k: int, *, alpha: Optional[float] = None, memory: bool = True):
+        if k <= 0:
+            raise ValueError(f"rand-k needs k >= 1, got {k}")
+        self.k = k
+        self.alpha = alpha
+        self.carries_state = memory
+
+    def _k(self, d: int) -> int:
+        return min(self.k, d)
+
+    # ---------------------------------------------------------------- wire
+
+    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
+        d = delta.shape[0]
+        idx = jax.random.choice(key, d, (self._k(d),), replace=False)
+        idx = idx.astype(jnp.int32)
+        return Payload(indices=idx, values=delta.astype(jnp.float32)[idx])
+
+    def decode(self, payload: Payload, d: int) -> jax.Array:
+        kk = payload.values.shape[-1]
+        scaled = payload.values * jnp.float32(d / kk)
+        return jnp.zeros((d,), jnp.float32).at[payload.indices].add(scaled)
+
+    def bits_per_dim(self, d: Optional[int] = None) -> float:
+        if d is None:
+            return 64.0  # per transmitted coordinate (index + value)
+        return 64.0 * self._k(d) / d
+
+    # -------------------------------------------------------- memory rule
+
+    def memory_alpha(self, d: Optional[int] = None) -> float:
+        if not self.carries_state:
+            return 0.0
+        if self.alpha is not None:
+            return self.alpha
+        if d is None:
+            return 1.0
+        return self._k(d) / d  # 1 / (1 + omega), omega = d/k - 1

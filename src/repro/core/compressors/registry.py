@@ -1,0 +1,132 @@
+"""Compressor registry: canonical names, legacy aliases, config -> instance.
+
+Canonical operators:
+
+    ternary   2 + 32/B bits/dim   unbiased   alpha-memory (DIANA)
+    natural   9 bits/dim          unbiased   alpha-memory (omega = 1/8)
+    randk     64k/d bits/dim      unbiased   alpha-memory (alpha = k/d)
+    topk_ef   64k/d bits/dim      biased     error-feedback residual
+    identity  32 bits/dim         exact      stateless
+
+Legacy ``CompressionConfig.method`` strings stay valid as aliases resolving to
+a canonical operator plus overrides (the paper's Sec. 3 special cases):
+
+    diana    -> ternary with memory            (Algorithm 1)
+    qsgd     -> ternary p=2,   memory off      (Algorithm 2)
+    terngrad -> ternary p=inf, memory off      (Algorithm 2)
+    dqgd     -> ternary p=cfg, memory off      (Khirirat et al. 2018)
+    none     -> identity
+
+Registering a new operator is one :func:`register` call; it is immediately
+reachable from ``CompressionConfig(method=...)``, the trainer CLI and the
+benchmarks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Tuple
+
+from .base import Compressor
+from .identity import IdentityCompressor
+from .natural import NaturalCompressor
+from .randk import RandKCompressor
+from .ternary import TernaryCompressor
+from .topk_ef import TopKEFCompressor
+
+__all__ = ["register", "alias", "make_compressor", "canonical_name", "available_methods"]
+
+# canonical name -> factory(cfg, **alias_overrides) -> Compressor
+_FACTORIES: Dict[str, Callable[..., Compressor]] = {}
+# alias -> (canonical name, overrides)
+_ALIASES: Dict[str, Tuple[str, dict]] = {}
+
+
+def register(name: str):
+    """Register a compressor factory ``f(cfg, **overrides) -> Compressor``."""
+
+    def deco(factory):
+        _FACTORIES[name] = factory
+        return factory
+
+    return deco
+
+
+def alias(name: str, canonical: str, **overrides):
+    """Map a legacy/alternate method string onto a canonical operator."""
+    _ALIASES[name] = (canonical, overrides)
+
+
+def canonical_name(method: str) -> str:
+    """Resolve a method string to its canonical registry name (KeyError if
+    unknown) — used by config validation."""
+    if method in _FACTORIES:
+        return method
+    if method in _ALIASES:
+        return _ALIASES[method][0]
+    raise KeyError(
+        f"unknown compression method {method!r}; choose from {available_methods()}"
+    )
+
+
+def available_methods() -> Tuple[str, ...]:
+    return tuple(sorted(set(_FACTORIES) | set(_ALIASES)))
+
+
+def make_compressor(cfg) -> Compressor:
+    """Build the compressor a :class:`~repro.core.compression.CompressionConfig`
+    names (``cfg`` only needs the config's field surface, keeping this module
+    import-cycle free)."""
+    if cfg.method in _ALIASES:
+        name, overrides = _ALIASES[cfg.method]
+    else:
+        name, overrides = cfg.method, {}
+    if name not in _FACTORIES:
+        raise KeyError(
+            f"unknown compression method {cfg.method!r}; choose from {available_methods()}"
+        )
+    return _FACTORIES[name](cfg, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Built-in operators
+# ---------------------------------------------------------------------------
+
+@register("ternary")
+def _ternary(cfg, *, p=None, memory=True):
+    return TernaryCompressor(
+        p=cfg.p if p is None else p,
+        block_size=cfg.block_size,
+        alpha=cfg.alpha,
+        memory=memory,
+        use_kernel=cfg.use_kernel,
+    )
+
+
+@register("natural")
+def _natural(cfg, *, memory=True):
+    return NaturalCompressor(alpha=cfg.alpha, memory=memory)
+
+
+@register("randk")
+def _randk(cfg, *, memory=True):
+    return RandKCompressor(cfg.k, alpha=cfg.alpha, memory=memory)
+
+
+@register("topk_ef")
+def _topk_ef(cfg):
+    return TopKEFCompressor(cfg.k)
+
+
+@register("identity")
+def _identity(cfg):
+    return IdentityCompressor()
+
+
+alias("diana", "ternary", memory=True)
+alias("qsgd", "ternary", p=2.0, memory=False)
+alias("terngrad", "ternary", p=math.inf, memory=False)
+alias("dqgd", "ternary", memory=False)
+alias("none", "identity")
+alias("rand-k", "randk")
+alias("top-k-ef", "topk_ef")

@@ -1,0 +1,115 @@
+"""Ternary block p-quantization (paper Def. 1/2) — DIANA's native operator.
+
+Wire format: 2-bit sign codes (4/byte, :mod:`repro.core.packing`) + one f32
+``||.||_p`` scale per block — ``2 + 32/B`` bits/dim.
+
+Kernel capability: with ``use_kernel=True`` the instance advertises and uses
+the Pallas hot paths — ``quantize_pack`` (fused quantize + bit-pack, one
+HBM->VMEM pass) on encode and ``unpack_reduce`` (streaming decode+accumulate
+over workers, DESIGN.md §2) on :meth:`decode_sum`.  The pure-jnp fallbacks
+remain the oracles; ``tests/test_compressors.py`` asserts the kernel
+``decode_sum`` is bitwise-equal to the fallback loop under ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..packing import pack2bit, unpack2bit
+from ..quantization import alpha_p, num_blocks, pad_to_blocks, quantize_blocks
+from .base import Compressor, Payload
+
+__all__ = ["TernaryCompressor"]
+
+
+class TernaryCompressor(Compressor):
+    """Block p-quantization with optional DIANA memory and Pallas kernels.
+
+    memory=True  -> the paper's DIANA (compress gradient differences,
+                    alpha-memory with the Corollary-1 default alpha_p/2)
+    memory=False -> Algorithm 2: QSGD (p=2) / TernGrad (p=inf) / DQGD.
+    """
+
+    name = "ternary"
+    unbiased = True
+
+    def __init__(
+        self,
+        *,
+        p: float = math.inf,
+        block_size: int = 2048,
+        alpha: Optional[float] = None,
+        memory: bool = True,
+        use_kernel: Optional[bool] = None,
+    ):
+        if block_size % 4:
+            raise ValueError("block_size must be a multiple of 4 for 2-bit packing")
+        self.p = p
+        self.block_size = block_size
+        self.alpha = alpha
+        self.carries_state = memory
+        # Capability, not an external switch: kernels are advertised by the
+        # compressor itself.  None = auto (compiled Mosaic on TPU; the slow
+        # interpret=True path is opted into explicitly on CPU).  The kernels
+        # require VPU-lane-aligned blocks, so auto only engages when the
+        # block size qualifies — small research block sizes stay on jnp.
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu" and block_size % 128 == 0
+        self.use_kernel = use_kernel
+
+    # ---------------------------------------------------------------- wire
+
+    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            blocks = pad_to_blocks(delta.astype(jnp.float32), self.block_size)
+            bits = jax.random.bits(key, blocks.shape, dtype=jnp.uint32)
+            packed, scales = _kops.quantize_pack_op(blocks, bits, p=self.p)
+            return Payload(packed=packed, scales=scales[:, 0])
+        q = quantize_blocks(delta, key, p=self.p, block_size=self.block_size)
+        return Payload(packed=pack2bit(q.signs), scales=q.scales)
+
+    def decode(self, payload: Payload, d: int) -> jax.Array:
+        signs = unpack2bit(payload.packed).astype(jnp.float32)      # (m, B)
+        dense = signs * payload.scales[:, None].astype(jnp.float32)
+        return dense.reshape(-1)[:d]
+
+    def decode_sum(self, gathered: Payload, n: int, d: int) -> jax.Array:
+        """Fused one-pass accumulate over workers (kernel), or the statically
+        unrolled loop (fallback — also required inside nested-manual
+        shard_map bodies where dynamic slicing over the gathered worker dim
+        trips the SPMD partitioner, DESIGN.md §6).  Both run the identical
+        f32 ``acc += signs_i * scale_i`` recurrence, so they are
+        bitwise-equal and interchangeable step to step."""
+        from repro.models.sharding import shard
+
+        packed, scales = gathered.packed, gathered.scales           # (n,m,B/4), (n,m)
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            acc = _kops.unpack_reduce_op(packed, scales[..., None])  # (m, B)
+            acc = shard(acc, "model", None)
+        else:
+            m, bs4 = packed.shape[-2], packed.shape[-1]
+            acc = shard(jnp.zeros((m, bs4 * 4), jnp.float32), "model", None)
+            for i in range(n):
+                signs = unpack2bit(packed[i]).astype(jnp.float32)   # (m, B)
+                acc = acc + signs * scales[i][:, None].astype(jnp.float32)
+        return acc.reshape(-1)[:d]
+
+    def bits_per_dim(self, d: Optional[int] = None) -> float:
+        return 2.0 + 32.0 / self.block_size
+
+    # -------------------------------------------------------- memory rule
+
+    def memory_alpha(self, d: Optional[int] = None) -> float:
+        if not self.carries_state:
+            return 0.0
+        if self.alpha is not None:
+            return self.alpha
+        return alpha_p(self.p, self.block_size) / 2.0  # Corollary 1

@@ -1,0 +1,70 @@
+"""Top-k with error feedback — biased sparsification, residual-carried memory.
+
+Transmits the ``k`` largest-magnitude coordinates of the error-corrected
+gradient ``delta_i = g_i + e_i`` and keeps the untransmitted remainder as the
+residual ``e_i^{k+1} = delta_i - dhat_i`` (EF-SGD / "memory-SGD", Stich et al.
+2018).  Biased, so it lives OUTSIDE the paper's unbiased analysis — it reuses
+the same ``h`` state slots as DIANA's memory but with the error-feedback
+update rule, which is exactly why the memory semantics belong to the
+compressor and not the aggregation loop.
+
+Wire format: ``indices`` + ``values``, like rand-k but with NO ``d/k``
+rescale (the selection is deterministic, rescaling would only add bias).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Compressor, Payload
+
+__all__ = ["TopKEFCompressor"]
+
+
+class TopKEFCompressor(Compressor):
+    name = "topk_ef"
+    unbiased = False
+    carries_state = True  # the EF residual
+
+    def __init__(self, k: int):
+        if k <= 0:
+            raise ValueError(f"top-k needs k >= 1, got {k}")
+        self.k = k
+
+    # ---------------------------------------------------------------- wire
+
+    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
+        del key  # deterministic selection
+        d = delta.shape[0]
+        kk = min(self.k, d)
+        _, idx = jax.lax.top_k(jnp.abs(delta), kk)
+        idx = idx.astype(jnp.int32)
+        return Payload(indices=idx, values=delta.astype(jnp.float32)[idx])
+
+    def decode(self, payload: Payload, d: int) -> jax.Array:
+        return jnp.zeros((d,), jnp.float32).at[payload.indices].add(payload.values)
+
+    def bits_per_dim(self, d: Optional[int] = None) -> float:
+        if d is None:
+            return 64.0
+        return 64.0 * min(self.k, d) / d
+
+    # ------------------------------------------------ error-feedback rule
+
+    def memory_alpha(self, d: Optional[int] = None) -> float:
+        return 1.0  # the residual is carried in full, not alpha-averaged
+
+    def compress_input(self, g: jax.Array, h: jax.Array) -> jax.Array:
+        return g + h  # error-corrected gradient
+
+    def next_memory(self, h: jax.Array, dhat: jax.Array, delta: jax.Array) -> jax.Array:
+        return delta - dhat  # what top-k dropped this round
+
+    def next_server_memory(self, h: jax.Array, dhat_mean: jax.Array) -> jax.Array:
+        return h  # no server-side memory in EF
+
+    def server_direction(self, h: jax.Array, dhat_mean: jax.Array) -> jax.Array:
+        return dhat_mean

@@ -4,33 +4,37 @@ Two implementations, one semantics:
 
 * :func:`aggregate_shardmap` — the production path, called *inside* a
   ``shard_map`` whose manual axes are the DIANA worker axes.  Each worker
-  quantizes its gradient difference, bit-packs it, all-gathers the packed
-  payload (the TPU analogue of the paper's MPI Gather + Broadcast — replicated
+  encodes its compressor input, all-gathers the :class:`Payload` wire format
+  (the TPU analogue of the paper's MPI Gather + Broadcast — replicated
   deterministic decode replaces the server), and every device reconstructs the
   identical aggregated estimator ``ghat = h^k + mean_i dhat_i``.
 
-* :func:`reference_step` — a single-process n-worker simulation (vmapped
-  quantization) used by unit tests, the convex-experiment benchmarks and the
-  paper-figure reproductions.  ``aggregate_shardmap`` is tested to agree with
-  it bit-for-bit under a shared PRNG schedule.
+* :func:`reference_step` — a single-process n-worker simulation used by unit
+  tests, the convex-experiment benchmarks and the paper-figure reproductions.
+  ``aggregate_shardmap`` is tested to agree with it bit-for-bit under a shared
+  PRNG schedule: both paths run the SAME compressor hooks, and the mean
+  accumulates through the same :meth:`Compressor.decode_sum` f32 recurrence.
 
-The memory update is Algorithm 1 line 6/9:
+Every operator-specific decision — what is encoded (gradient vs gradient
+difference vs error-corrected gradient), how the memories evolve, how the
+gathered payload decodes — lives behind the :class:`Compressor` interface
+(:mod:`repro.core.compressors`); this module only owns the pytree plumbing,
+the worker collective and the memory-state layout.  For the paper's operator
+the hooks are Algorithm 1 lines 5-9:
     h_i^{k+1} = h_i^k + alpha * dhat_i^k
     h^{k+1}   = h^k   + alpha * mean_i dhat_i^k
-and the returned direction is line 8: ``ghat^k = h^k + mean_i dhat_i^k``.
+    ghat^k    = h^k + mean_i dhat_i^k
 """
 
 from __future__ import annotations
 
-import math
 from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .compression import CompressionConfig, compress_tree
-from .packing import unpack2bit
-from .quantization import QuantizedBlocks, dequantize_blocks, quantize_blocks
+from .compression import CompressionConfig
+from .compressors import Compressor, Payload
 
 __all__ = [
     "DianaState",
@@ -48,17 +52,23 @@ def tree_zeros_like(tree, dtype=None):
     )
 
 
+def _is_payload(t) -> bool:
+    return isinstance(t, Payload)
+
+
 class DianaState(NamedTuple):
     """Compressor state carried by the training loop.
 
     Memories are stored FLAT (one 1-D leaf per param leaf, sharded evenly over
-    the 'model' axis) — the same layout quantization blocks live in, so the
+    the 'model' axis) — the same layout compression operates in, so the
     entire compress -> gather -> decode -> h-update path is layout-local; the
     only relayouts per step are grads->flat and ghat->param-shape (both over
     the fast intra-pod ICI; see DESIGN.md §Perf notes).
 
     h_worker: pytree of (n_workers, d_leaf) f32/bf16 — axis 0 sharded over the
-              worker mesh axes (each worker holds only its own memory).
+              worker mesh axes (each worker holds only its own memory).  The
+              paper's h_i for alpha-memory operators; the error-feedback
+              residual e_i for top-k EF; inert zeros for memoryless ones.
     h_server: pytree of (d_leaf,) — replicated over worker axes — the paper's
               server-side ``h^k = mean_i h_i^k``.
     """
@@ -68,7 +78,7 @@ class DianaState(NamedTuple):
 
 
 def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
-    """h_i^0 = 0 (the paper's experimental choice) for all methods."""
+    """h_i^0 = 0 (the paper's experimental choice) for all operators."""
     h_w = jax.tree_util.tree_map(
         lambda p: jnp.zeros((n_workers, p.size), cfg.h_dtype), params
     )
@@ -80,64 +90,46 @@ def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
 # Distributed aggregation (inside shard_map over worker axes)
 # ---------------------------------------------------------------------------
 
-def _gathered_mean(payload, like, n_workers: int, axis_names):
-    """mean_i dequant(payload_i) without materialising n dense copies.
+def _gather_payloads(payload_tree, axis_names):
+    """All-gather every array field of every per-leaf :class:`Payload`.
 
-    All-gathers the 2-bit packed payload (cheap: n * d/4 bytes) and then
-    decodes sequentially with a fori_loop accumulator so peak memory stays at
-    one dense gradient regardless of n.  The gathered buffers and the f32
-    accumulator are explicitly re-constrained to stay sharded over 'model' on
-    the block dim — ``all_gather`` output sharding does not propagate the auto
-    axes by itself and would otherwise replicate n * d/4 bytes per device.
+    The gathered buffers are explicitly re-constrained to stay sharded over
+    'model' on the post-worker dim — ``all_gather`` output sharding does not
+    propagate the auto axes by itself and would otherwise replicate the
+    payload n times per device.
     """
     from repro.models.sharding import shard
 
-    def gather(leaf):
-        g = {
-            "packed": jax.lax.all_gather(leaf["packed"], axis_names, tiled=False)
-            if axis_names else leaf["packed"][None],
-            "scales": jax.lax.all_gather(leaf["scales"], axis_names, tiled=False)
-            if axis_names else leaf["scales"][None],
-        }
-        g["packed"] = shard(g["packed"], None, "model", None)
-        g["scales"] = shard(g["scales"], None, "model")
-        return g
+    def gather_field(a):
+        out = (
+            jax.lax.all_gather(a, axis_names, tiled=False)
+            if axis_names else a[None]
+        )
+        return shard(out, None, "model", *(None,) * (out.ndim - 2))
 
-    gathered = jax.tree_util.tree_map(
-        gather, payload, is_leaf=lambda t: isinstance(t, dict) and "packed" in t
-    )
+    def gather_leaf(pay: Payload) -> Payload:
+        return Payload(*(None if f is None else gather_field(f) for f in pay))
+
+    return jax.tree_util.tree_map(gather_leaf, payload_tree, is_leaf=_is_payload)
+
+
+def _gathered_mean(payload_tree, like, n_workers: int, axis_names, comp: Compressor):
+    """mean_i decode(payload_i) without materialising n dense copies.
+
+    All-gathers the compressed payload (cheap: n * bits_per_dim * d / 8 bytes)
+    and decodes through the compressor's :meth:`decode_sum` — the fused Pallas
+    unpack+reduce for kernel-backed operators, a sequential f32 accumulate
+    otherwise — so peak memory stays at one dense gradient regardless of n.
+    """
+    gathered = _gather_payloads(payload_tree, axis_names)
 
     like_leaves, treedef = jax.tree_util.tree_flatten(like)
-    pay_leaves = jax.tree_util.tree_leaves(
-        gathered, is_leaf=lambda t: isinstance(t, dict) and "packed" in t
-    )
+    pay_leaves = jax.tree_util.tree_leaves(gathered, is_leaf=_is_payload)
 
     outs = []
     for pay, l in zip(pay_leaves, like_leaves):
-        packed, scales = pay["packed"], pay["scales"]           # (n, m, B/4), (n, m)
-        m, bs4 = packed.shape[-2], packed.shape[-1]
-        # statically-unrolled accumulation: dynamic-slice over the gathered
-        # worker dim trips the SPMD partitioner under multiple manual axes
-        # (RET_CHECK "Incompatible manual sharding"), and static slices also
-        # fuse better; n_workers is a mesh constant so the unroll is bounded.
-        acc = shard(jnp.zeros((m, bs4 * 4), jnp.float32), "model", None)
-        for i in range(n_workers):
-            signs = unpack2bit(packed[i]).astype(jnp.float32)   # (m, B)
-            acc = acc + signs * scales[i][:, None].astype(jnp.float32)
-        mean = (acc / n_workers).reshape(-1)[: l.size].reshape(l.shape)
-        outs.append(mean.astype(l.dtype))
-    return jax.tree_util.tree_unflatten(treedef, outs)
-
-
-def _dequant_own(qtree, like):
-    like_leaves, treedef = jax.tree_util.tree_flatten(like)
-    q_leaves = jax.tree_util.tree_leaves(
-        qtree, is_leaf=lambda t: isinstance(t, QuantizedBlocks)
-    )
-    outs = [
-        dequantize_blocks(q, shape=l.shape, dtype=jnp.float32).astype(l.dtype)
-        for q, l in zip(q_leaves, like_leaves)
-    ]
+        total = comp.decode_sum(pay, n_workers, l.size)
+        outs.append((total / n_workers).reshape(l.shape).astype(l.dtype))
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
@@ -146,41 +138,46 @@ def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_wo
 
     grads_local leaves may have any shape — they are flattened locally; the
     h leaves are flat ``(1, d_local)`` / ``(d_local,)``.  ``axis_names`` are
-    the (manual) worker axes the packed payload is gathered over.
+    the (manual) worker axes the packed payload is gathered over.  All
+    operator behaviour dispatches through the configured compressor's hooks.
     """
+    comp = cfg.make()
+
     g_flat = jax.tree_util.tree_map(
         lambda g: g.reshape(-1).astype(jnp.float32), grads_local
     )
-    h_local = jax.tree_util.tree_map(lambda h: h[0], h_worker)
+    h_local = jax.tree_util.tree_map(
+        lambda h: h[0].astype(jnp.float32), h_worker
+    )
 
-    if cfg.uses_memory:
-        delta = jax.tree_util.tree_map(
-            lambda g, h: g - h.astype(jnp.float32), g_flat, h_local
-        )
-    else:  # qsgd / terngrad / dqgd quantize the gradient itself
-        delta = g_flat
+    delta = jax.tree_util.tree_map(comp.compress_input, g_flat, h_local)
 
-    payload, qtree = compress_tree(delta, key, cfg)
-    dhat_mean = _gathered_mean(payload, g_flat, n_workers, axis_names)
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    keys = jax.random.split(key, len(leaves))
+    payloads = [comp.compress(leaf, k) for leaf, k in zip(leaves, keys)]
+    payload_tree = jax.tree_util.tree_unflatten(treedef, payloads)
+    # The worker's own estimate, for its memory update — decoded from the
+    # payload (bitwise the transmitted value); dead-code-eliminated under jit
+    # for operators whose hooks ignore it.
+    dhat_own = jax.tree_util.tree_unflatten(
+        treedef, [comp.decode(p, leaf.size) for p, leaf in zip(payloads, leaves)]
+    )
 
-    alpha = cfg.effective_alpha()
-    if cfg.uses_memory:
-        dhat_own = _dequant_own(qtree, g_flat)
-        new_h_local = jax.tree_util.tree_map(
-            lambda h, d: (h.astype(jnp.float32) + alpha * d).astype(cfg.h_dtype),
-            h_local, dhat_own,
-        )
-        new_h_server = jax.tree_util.tree_map(
-            lambda h, d: (h.astype(jnp.float32) + alpha * d).astype(cfg.h_dtype),
-            h_server, dhat_mean,
-        )
-        ghat_flat = jax.tree_util.tree_map(
-            lambda h, d: h.astype(jnp.float32) + d, h_server, dhat_mean
-        )
-        new_hw = jax.tree_util.tree_map(lambda h: h[None], new_h_local)
-    else:
-        ghat_flat = dhat_mean
-        new_hw, new_h_server = h_worker, h_server
+    dhat_mean = _gathered_mean(payload_tree, g_flat, n_workers, axis_names, comp)
+
+    new_h_local = jax.tree_util.tree_map(
+        lambda h, dh, dl: comp.next_memory(h, dh, dl).astype(cfg.h_dtype),
+        h_local, dhat_own, delta,
+    )
+    new_hw = jax.tree_util.tree_map(lambda h: h[None], new_h_local)
+    new_h_server = jax.tree_util.tree_map(
+        lambda h, dm: comp.next_server_memory(h.astype(jnp.float32), dm).astype(cfg.h_dtype),
+        h_server, dhat_mean,
+    )
+    ghat_flat = jax.tree_util.tree_map(
+        lambda h, dm: comp.server_direction(h.astype(jnp.float32), dm),
+        h_server, dhat_mean,
+    )
 
     ghat = jax.tree_util.tree_map(
         lambda f, g: f.reshape(g.shape).astype(g.dtype), ghat_flat, grads_local
@@ -210,8 +207,8 @@ def aggregate_shardmap(
     When ``inner_axes`` (the non-worker mesh axes, e.g. ('model',) or
     ('data','model')) are given together with per-leaf PartitionSpecs, the
     whole round runs inside a NESTED fully-manual shard_map: each inner
-    device quantizes / packs / decodes ITS OWN shard of every gradient leaf
-    and the packed all-gather runs over the (outer-manual) worker axes.  No
+    device encodes / decodes ITS OWN shard of every gradient leaf and the
+    payload all-gather runs over the (outer-manual) worker axes.  No
     relayout, no partitioner decisions — XLA's SPMD partitioner crashes on
     several of them under manual subgroups (DESIGN.md §6).  The h memory is
     stored in this shard-local flat layout, which is self-consistent step to
@@ -223,9 +220,12 @@ def aggregate_shardmap(
     axis_names = tuple(axis_names)
     inner_axes = tuple(inner_axes)
 
-    if cfg.method == "none":
+    comp = cfg.make()
+    if comp.prefers_allreduce:
+        # dense stateless payload: the gathered mean IS a fused all-reduce
         ghat = jax.tree_util.tree_map(
-            lambda g: jax.lax.pmean(g, axis_names) if axis_names else g, grads_local
+            lambda g: jax.lax.pmean(g, axis_names) if axis_names else g,
+            grads_local,
         )
         return ghat, state
 
@@ -237,9 +237,9 @@ def aggregate_shardmap(
         )
         return ghat, DianaState(h_worker=new_hw, h_server=new_hs)
 
-    from jax import shard_map as _shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map as _shard_map
     from repro.models.sharding import NoopPolicy, sharding_policy
 
     amesh = None
@@ -298,61 +298,64 @@ def reference_step(
     """Aggregate stacked per-worker grads (n, ...) exactly as Algorithm 1.
 
     Bit-for-bit aligned with :func:`aggregate_shardmap`: worker ``i`` draws
-    from ``fold_in(key, i)`` through the same ``compress_tree`` path, and the
-    mean accumulates in the same sequential f32 order as the distributed
-    decode loop — tests assert exact equality between the two.
+    from ``fold_in(key, i)`` through the same per-leaf compress path, and the
+    mean runs through the same :meth:`Compressor.decode_sum` sequential f32
+    recurrence as the distributed decode — tests assert exact equality
+    between the two.
 
     Returns (v, new_state): ``v = beta*v + ghat`` — caller does the prox step.
     """
-    from .compression import compress_tree  # local import to avoid cycle
-
+    comp = cfg.make()
     n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
 
-    if cfg.method == "none":
-        ghat = jax.tree_util.tree_map(lambda g: g.mean(0), grads_per_worker)
-        new_state = state
-    else:
-        alpha = cfg.effective_alpha()
-        acc = None
-        new_h_rows = []
-        for w in range(n):
-            gw = jax.tree_util.tree_map(
-                lambda g: g[w].astype(jnp.float32).reshape(-1), grads_per_worker
-            )
-            if cfg.uses_memory:
-                hw = jax.tree_util.tree_map(lambda h: h[w].astype(jnp.float32), state.h_worker)
-                delta = jax.tree_util.tree_map(lambda g, h: g - h, gw, hw)
-            else:
-                delta = gw
-            _, qtree = compress_tree(delta, jax.random.fold_in(key, w), cfg)
-            dhat_w = _dequant_own(qtree, gw)
-            acc = dhat_w if acc is None else jax.tree_util.tree_map(
-                lambda a, d: a + d, acc, dhat_w
-            )
-            if cfg.uses_memory:
-                new_h_rows.append(jax.tree_util.tree_map(
-                    lambda h, d: h + alpha * d, hw, dhat_w
-                ))
-        dhat_mean = jax.tree_util.tree_map(lambda a: a / n, acc)
-
-        if cfg.uses_memory:
-            ghat_flat = jax.tree_util.tree_map(
-                lambda h, d: h + d, state.h_server, dhat_mean
-            )
-            new_state = state._replace(
-                h_worker=jax.tree_util.tree_map(
-                    lambda *rows: jnp.stack(rows), *new_h_rows
-                ),
-                h_server=jax.tree_util.tree_map(
-                    lambda h, d: h + alpha * d, state.h_server, dhat_mean
-                ),
-            )
-        else:
-            ghat_flat = dhat_mean
-            new_state = state
-        ghat = jax.tree_util.tree_map(
-            lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
+    payload_trees = []
+    new_h_rows = []
+    for w in range(n):
+        gw = jax.tree_util.tree_map(
+            lambda g: g[w].astype(jnp.float32).reshape(-1), grads_per_worker
         )
+        hw = jax.tree_util.tree_map(
+            lambda h: h[w].astype(jnp.float32), state.h_worker
+        )
+        delta = jax.tree_util.tree_map(comp.compress_input, gw, hw)
+
+        leaves, treedef = jax.tree_util.tree_flatten(delta)
+        keys = jax.random.split(jax.random.fold_in(key, w), len(leaves))
+        payloads = [comp.compress(leaf, k) for leaf, k in zip(leaves, keys)]
+        dhat_w = jax.tree_util.tree_unflatten(
+            treedef, [comp.decode(p, leaf.size) for p, leaf in zip(payloads, leaves)]
+        )
+        payload_trees.append(jax.tree_util.tree_unflatten(treedef, payloads))
+        new_h_rows.append(jax.tree_util.tree_map(
+            comp.next_memory, hw, dhat_w, delta
+        ))
+
+    # Stack per-worker payloads into the gathered layout (leading worker axis)
+    # and decode through the same summation path as the distributed server.
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *payload_trees)
+    like_leaves, treedef = jax.tree_util.tree_flatten(
+        jax.tree_util.tree_map(
+            lambda g: g[0].astype(jnp.float32).reshape(-1), grads_per_worker
+        )
+    )
+    pay_leaves = jax.tree_util.tree_leaves(stacked, is_leaf=_is_payload)
+    dhat_mean = jax.tree_util.tree_unflatten(treedef, [
+        comp.decode_sum(pay, n, l.size) / n
+        for pay, l in zip(pay_leaves, like_leaves)
+    ])
+
+    ghat_flat = jax.tree_util.tree_map(
+        comp.server_direction, state.h_server, dhat_mean
+    )
+    new_state = state._replace(
+        h_worker=jax.tree_util.tree_map(lambda *rows: jnp.stack(rows), *new_h_rows),
+        h_server=jax.tree_util.tree_map(
+            comp.next_server_memory, state.h_server, dhat_mean
+        ),
+    )
+    ghat = jax.tree_util.tree_map(
+        lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
+    )
 
     v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
     return v, new_state._replace(v=v)

@@ -107,7 +107,9 @@ def pad_to_blocks(x: jax.Array, block_size: int) -> jax.Array:
     m = num_blocks(d, block_size)
     pad = m * block_size - d
     if pad:
-        flat = jnp.pad(flat, (0, pad))
+        # concatenate, not jnp.pad: the HLO Pad op RET_CHECKs in old XLA's
+        # SPMD partitioner inside partial-manual shard_map bodies
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     return flat.reshape(m, block_size)
 
 

@@ -1,26 +1,27 @@
 """jit'd public wrappers around the Pallas kernels.
 
 ``interpret`` defaults to True on CPU backends (this container) and False on
-TPU, where the same kernel bodies compile to Mosaic.  ``compress_tree_kernel``
-is the drop-in used by :func:`repro.core.compression.compress_tree` when
-``CompressionConfig.use_kernel`` is set: identical semantics, fused data path.
+TPU, where the same kernel bodies compile to Mosaic.  Kernel-backed
+compressors (:class:`repro.core.compressors.TernaryCompressor` with
+``use_kernel=True``) advertise the capability themselves and route their
+encode through :func:`quantize_pack_op` and their server-side decode through
+:func:`unpack_reduce_op` — consumers of the compressor interface never switch
+on an external flag (DESIGN.md §2).
+
+The kernel encode draws its Bernoulli bits from an independent PRNG stream,
+so values agree with the pure-jnp path in distribution, not bitwise; the
+kernel *decode* is bitwise-equal to the fallback loop (same f32 accumulate
+recurrence) and tested as such in ``tests/test_compressors.py``.
 """
 
 from __future__ import annotations
 
-import math
-from typing import Any
-
 import jax
-import jax.numpy as jnp
-
-from repro.core.packing import unpack2bit
-from repro.core.quantization import QuantizedBlocks, pad_to_blocks
 
 from .quantize_pack import quantize_pack
 from .unpack_reduce import unpack_reduce
 
-__all__ = ["default_interpret", "quantize_pack_op", "unpack_reduce_op", "compress_tree_kernel"]
+__all__ = ["default_interpret", "quantize_pack_op", "unpack_reduce_op"]
 
 
 def default_interpret() -> bool:
@@ -33,27 +34,3 @@ def quantize_pack_op(delta2d, bits, *, p: float):
 
 def unpack_reduce_op(packed, scales):
     return unpack_reduce(packed, scales, interpret=default_interpret())
-
-
-def compress_tree_kernel(tree, key, cfg):
-    """Kernel-backed equivalent of ``compression.compress_tree``.
-
-    Matches the reference path's *representation* exactly (same payload pytree
-    structure); the Bernoulli draws use an independent PRNG stream, so values
-    agree in distribution, not bitwise — tests compare moments and the packed
-    format, plus bitwise equality of pack(unpack(x)).
-    """
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    payloads, qs = [], []
-    p = cfg.effective_p()
-    for leaf, k in zip(leaves, keys):
-        blocks = pad_to_blocks(leaf.astype(jnp.float32), cfg.block_size)
-        bits = jax.random.bits(k, blocks.shape, dtype=jnp.uint32)
-        packed, scales = quantize_pack_op(blocks, bits, p=p)
-        scales1 = scales[:, 0]
-        payloads.append({"packed": packed, "scales": scales1})
-        qs.append(QuantizedBlocks(signs=unpack2bit(packed), scales=scales1))
-    payload = jax.tree_util.tree_unflatten(treedef, payloads)
-    qtree = jax.tree_util.tree_unflatten(treedef, qs)
-    return payload, qtree

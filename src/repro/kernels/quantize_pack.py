@@ -91,8 +91,9 @@ def quantize_pack(
         raise ValueError(f"block size {b} must be a multiple of 128 (VPU lanes)")
     mp = -(-m // tile_m) * tile_m
     if mp != m:
-        delta = jnp.pad(delta, ((0, mp - m), (0, 0)))
-        bits = jnp.pad(bits, ((0, mp - m), (0, 0)))
+        # concatenate, not jnp.pad (partial-manual shard_map, see pad_to_blocks)
+        delta = jnp.concatenate([delta, jnp.zeros((mp - m, b), delta.dtype)])
+        bits = jnp.concatenate([bits, jnp.zeros((mp - m, b), bits.dtype)])
 
     grid = (mp // tile_m,)
     packed, scales = pl.pallas_call(

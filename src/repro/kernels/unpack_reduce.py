@@ -55,8 +55,11 @@ def unpack_reduce(
     n, m, b4 = packed.shape
     mp = -(-m // tile_m) * tile_m
     if mp != m:
-        packed = jnp.pad(packed, ((0, 0), (0, mp - m), (0, 0)))
-        scales = jnp.pad(scales, ((0, 0), (0, mp - m), (0, 0)))
+        # concatenate, not jnp.pad (partial-manual shard_map, see pad_to_blocks)
+        packed = jnp.concatenate(
+            [packed, jnp.zeros((n, mp - m, b4), packed.dtype)], axis=1)
+        scales = jnp.concatenate(
+            [scales, jnp.zeros((n, mp - m, 1), scales.dtype)], axis=1)
 
     grid = (n, mp // tile_m)
     out = pl.pallas_call(

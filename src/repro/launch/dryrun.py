@@ -204,6 +204,8 @@ def lower_pair(arch: str, shape_name: str, mesh, *, compression: Optional[str] =
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # old jax: one dict per program
+        cost = cost[0] if cost else {}
     colls = parse_collectives(compiled.as_text())
 
     mem_bytes = (

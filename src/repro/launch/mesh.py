@@ -78,7 +78,9 @@ def worker_index(worker_axes: Sequence[str]):
     """Linearised worker index inside a shard_map body (row-major)."""
     import jax.numpy as jnp
 
+    from repro.compat import axis_size
+
     idx = jnp.zeros((), jnp.int32)
     for a in worker_axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx

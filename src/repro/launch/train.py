@@ -29,8 +29,9 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs import get_config, get_shape, input_specs
 from repro.core.compression import CompressionConfig
@@ -47,7 +48,6 @@ from .mesh import (
     resolve_train_mesh,
     worker_axes_in,
     worker_count,
-    worker_index,
 )
 from .sharding_rules import batch_specs, param_specs
 
@@ -60,6 +60,7 @@ def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: floa
         method=cfg.compression,
         p=cfg.comp_p,
         block_size=cfg.comp_block,
+        k=cfg.comp_k,
         worker_axes=cfg.comp_worker_axes,
         h_dtype=cfg.h_dtype,
     )
@@ -141,28 +142,48 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
     comp = opt.compression
     mesh, waxes = resolve_train_mesh(mesh, comp.worker_axes)
     n_workers = worker_count(mesh, waxes)
+
+    from repro.compat import supports_nested_manual
+
+    if waxes and not supports_nested_manual() and not cfg.scan_unroll:
+        # Old XLA RET_CHECKs on dynamic-slice over scan-stacked params inside
+        # any manual subgroup; statically unrolling the layer scan removes
+        # the dynamic-slice (same math, bigger HLO — fine at test scale).
+        from dataclasses import replace as _dc_replace
+
+        cfg = _dc_replace(cfg, scan_unroll=True)
     daxes = data_axes(mesh)
     wtuple = waxes if len(waxes) != 1 else waxes[0]
 
     inner_axes = tuple(a for a in mesh.axis_names if a not in waxes)
     fsdp = tuple(a for a in daxes if a not in waxes)
 
-    def local_step(params, opt_state, batch, key):
+    def local_step(params, opt_state, batch, key, widx):
+        # widx: (1,) int32 — this worker's linear index, fed in as sharded
+        # data rather than computed via axis_index (which lowers to an
+        # unpartitionable PartitionId under partial-manual on old XLA).
         policy = GSPMDPolicy(mesh, manual=waxes)
         with sharding_policy(policy):
             loss, grads = jax.value_and_grad(
                 lambda p: train_loss(p, batch, cfg, window=window)
             )(params)
 
-            widx = worker_index(waxes)
-            wkey = jax.random.fold_in(key, widx)
-            gspecs = param_specs(params, cfg, mesh, fsdp_axes=fsdp)
+            wkey = jax.random.fold_in(key, widx[0])
+            # Nested fully-manual aggregation where the toolchain supports
+            # it; otherwise keep the inner axes auto (GSPMD constraints) —
+            # old XLA RET_CHECKs on completing manualization in a nested map.
+            from repro.compat import supports_nested_manual
+
+            gspecs = (
+                param_specs(params, cfg, mesh, fsdp_axes=fsdp)
+                if supports_nested_manual() else None
+            )
             ghat, new_diana = aggregate_shardmap(
                 grads, opt_state.diana, wkey, comp,
                 axis_names=waxes, n_workers=n_workers,
                 inner_axes=inner_axes,
                 grad_specs=gspecs,
-                h_specs=h_flat_specs(gspecs),
+                h_specs=h_flat_specs(gspecs) if gspecs is not None else None,
                 mesh=mesh,
             )
             if waxes:
@@ -174,7 +195,10 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
         return new_params, new_opt, metrics
 
     if not waxes:
-        return jax.jit(local_step, donate_argnums=(0, 1))
+        def single(params, opt_state, batch, key):
+            return local_step(params, opt_state, batch, key,
+                              jnp.zeros((1,), jnp.int32))
+        return jax.jit(single, donate_argnums=(0, 1))
 
     # --- shard_map in/out specs: manual axes only ---
     rep = P()
@@ -202,6 +226,7 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
             opt_spec_tree(opt_state),
             batch_spec_tree(batch),
             rep,
+            P(wtuple),
         )
         out_specs = (
             jax.tree_util.tree_map(p_spec, params),
@@ -216,7 +241,8 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
             axis_names=set(waxes),
             check_vma=False,
         )
-        return fn(params, opt_state, batch, key)
+        return fn(params, opt_state, batch, key,
+                  jnp.arange(n_workers, dtype=jnp.int32))
 
     return jax.jit(wrapped, donate_argnums=(0, 1))
 
@@ -249,8 +275,12 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--inner", default="momentum", choices=["momentum", "adamw"])
+    from repro.core import available_methods
+
     ap.add_argument("--compression", default=None,
-                    choices=[None, "diana", "qsgd", "terngrad", "dqgd", "none"])
+                    choices=[None, *available_methods()])
+    ap.add_argument("--comp-k", type=int, default=None,
+                    help="kept coordinates for rand-k / top-k compressors")
     ap.add_argument("--mesh", default=None, help="e.g. 2x2 (data x model) or 2x2x2")
     ap.add_argument("--reduced", action="store_true", help="toy config for CPU runs")
     ap.add_argument("--batch", type=int, default=None, help="override global batch")
@@ -269,6 +299,8 @@ def main(argv=None):
         cfg = make_reduced(cfg)
     if args.compression:
         cfg = dc_replace(cfg, compression=args.compression)
+    if args.comp_k:
+        cfg = dc_replace(cfg, comp_k=args.comp_k)
     shape = get_shape(args.shape)
     if args.batch or args.seq:
         shape = ShapeConfig(shape.name, args.seq or shape.seq_len,

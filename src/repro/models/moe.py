@@ -229,7 +229,7 @@ def moe_layer(params, x, cfg) -> Tuple[jax.Array, jax.Array]:
                 aux = jax.lax.pmean(aux, "data")
             return combined, aux
 
-    from jax import shard_map as _shard_map
+    from repro.compat import shard_map as _shard_map
 
     combined, aux = _shard_map(
         body, mesh=amesh,

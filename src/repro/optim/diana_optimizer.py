@@ -49,6 +49,11 @@ class DianaOptimizer:
         self.schedule = schedule or constant_schedule(lr)
         self.regularizer = regularizer or no_reg()
 
+    @property
+    def compressor(self):
+        """The registry-resolved compression operator this optimizer runs."""
+        return self.compression.make()
+
     def init(self, params, n_workers: int) -> DianaOptState:
         return DianaOptState(
             step=jnp.zeros((), jnp.int32),

@@ -66,8 +66,8 @@ def test_distributed_matches_reference_bitwise():
     code = """
 import jax, jax.numpy as jnp, numpy as np, json, math
 from functools import partial
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import CompressionConfig, DianaState, aggregate_shardmap, init_state
 from repro.core.diana import reference_init, reference_step
 from repro.launch.mesh import make_mesh
