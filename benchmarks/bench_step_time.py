@@ -1,0 +1,236 @@
+"""Step-time benchmark: bucketed vs per-leaf aggregation (ISSUE 2).
+
+Measures wall-clock time of one DIANA aggregation step across operators,
+model sizes, and execution paths, and emits ``BENCH_step_time.json`` at the
+repo root so every PR from here on has a perf trajectory:
+
+* ``reference`` — the n-worker single-process `reference_step` (the path the
+  convex benchmarks and figure reproductions run);
+* ``shardmap``  — `aggregate_shardmap` inside a real worker shard_map (only
+  when >= 4 devices are available, e.g. under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+
+Each (size, operator, path) cell is timed for both layouts; the JSON also
+records the per-layout payload collective count implied by the leaf count
+(leaves x fields vs 1) for the HBM/collective table in DESIGN.md §Perf.
+
+Run directly (``python -m benchmarks.bench_step_time [--smoke]``) or via
+``benchmarks.run``.  ``--smoke`` cuts steps/reps for CI but keeps the full
+size x operator grid, so the uploaded artifact always satisfies the >= 2
+sizes x >= 3 operators acceptance shape.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CompressionConfig, reference_init, reference_step
+from repro.core.diana import DianaState, aggregate_shardmap, bucket_layout, init_state
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_step_time.json")
+
+N_WORKERS = 4
+
+# Synthetic multi-leaf "models": many leaves is exactly the regime the
+# bucketed layout targets (a transformer has ~100), sized for CPU CI.
+def _layered(n_layers, d, emb):
+    return [("emb", emb)] + [
+        (f"l{i}.{nm}", shp)
+        for i in range(n_layers)
+        for nm, shp in [("wq", (d, d)), ("wo", (d, d)), ("mlp", (d, 2 * d)), ("b", (2 * d,))]
+    ]
+
+
+# full grid: ~34 leaves / ~66k params and ~66 leaves / ~530k params
+SIZES = {
+    "small": _layered(8, 32, (64, 32)),
+    "medium": _layered(16, 64, (256, 64)),
+}
+# smoke keeps the 2-sizes x 3-operators shape but compiles ~4x less
+SIZES_SMOKE = {
+    "tiny": _layered(4, 16, (32, 16)),
+    "small": SIZES["small"],
+}
+
+OPERATORS = [
+    ("diana", dict(block_size=256, p=math.inf)),
+    ("natural", {}),
+    ("randk", dict(k=32)),
+]
+
+
+def _params(spec):
+    return {name: jnp.zeros(shape, jnp.float32) for name, shape in spec}
+
+
+def _grads(params, n, key):
+    return {
+        k: jax.random.normal(jax.random.fold_in(key, i), (n,) + v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+
+
+def _timeit_interleaved(cells: dict, reps: int) -> dict:
+    """Median wall time in us per cell, post-warmup, with the cells'
+    executions INTERLEAVED rep by rep: ambient load on a shared CPU then
+    perturbs every layout equally instead of poisoning one cell's whole
+    measurement window (which flips individual comparisons run to run)."""
+    for fn, args in cells.values():
+        jax.block_until_ready(fn(*args))
+    ts = {k: [] for k in cells}
+    for _ in range(reps):
+        for k, (fn, args) in cells.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts[k].append(time.perf_counter() - t0)
+    return {k: sorted(v)[len(v) // 2] * 1e6 for k, v in ts.items()}
+
+
+def _setup_reference(params, cfg, key):
+    grads = _grads(params, N_WORKERS, key)
+    state = reference_init(params, cfg, N_WORKERS)
+    step = jax.jit(lambda g, s, k: reference_step(g, s, k, cfg))
+    return step, (grads, state, key)
+
+
+def _setup_shardmap(params, cfg, key):
+    """The real distributed round over a 4-worker mesh (needs >= 4 devices)."""
+    if jax.device_count() < N_WORKERS:
+        return None
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((N_WORKERS, 1), ("data", "model"))
+    grads = _grads(params, N_WORKERS, key)
+    state = init_state(params, cfg, N_WORKERS)
+
+    def body(gs, h_w, h_s, k):
+        g_local = jax.tree_util.tree_map(lambda g: g[0], gs)
+        wkey = jax.random.fold_in(k, jax.lax.axis_index("data"))
+        ghat, new = aggregate_shardmap(
+            g_local, DianaState(h_w, h_s), wkey, cfg,
+            axis_names=("data",), n_workers=N_WORKERS)
+        return ghat, new.h_worker, new.h_server
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree_util.tree_map(lambda _: P("data"), grads),
+                  jax.tree_util.tree_map(lambda _: P("data"), state.h_worker),
+                  jax.tree_util.tree_map(lambda _: P(), state.h_server), P()),
+        out_specs=(jax.tree_util.tree_map(lambda _: P(), params),
+                   jax.tree_util.tree_map(lambda _: P("data"), state.h_worker),
+                   jax.tree_util.tree_map(lambda _: P(), state.h_server)),
+        axis_names={"data"}, check_vma=False)
+    return jax.jit(fn), (grads, state.h_worker, state.h_server, key)
+
+
+PATHS = {
+    "reference": _setup_reference,
+    "shardmap": _setup_shardmap,
+}
+
+
+def collect(smoke: bool = False):
+    reps = 5 if smoke else 15
+    key = jax.random.PRNGKey(0)
+    rows = []
+    sizes = SIZES_SMOKE if smoke else SIZES
+    for size_name, spec in sizes.items():
+        params = _params(spec)
+        for method, kw in OPERATORS:
+            for path, setup in PATHS.items():
+                cells = {}
+                for layout in ("perleaf", "bucketed"):
+                    cfg = CompressionConfig(method=method, bucketed=(layout == "bucketed"), **kw)
+                    made = setup(params, cfg, key)
+                    if made is not None:
+                        cells[layout] = made
+                if not cells:
+                    continue
+                cell = _timeit_interleaved(cells, reps)
+                lay = bucket_layout(CompressionConfig(method=method, bucketed=True, **kw), params)
+                rows.append({
+                    "size": size_name,
+                    "n_params": lay.size,
+                    "n_leaves": lay.n_leaves,
+                    "operator": method,
+                    "path": path,
+                    "us_perleaf": cell.get("perleaf"),
+                    "us_bucketed": cell.get("bucketed"),
+                    "speedup": (cell["perleaf"] / cell["bucketed"]
+                                if "perleaf" in cell and "bucketed" in cell else None),
+                })
+    return rows
+
+
+def write_json(rows, path=OUT_PATH):
+    doc = {
+        "bench": "step_time",
+        "n_workers": N_WORKERS,
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+def run():
+    """benchmarks.run entry point: returns CSV rows and writes the JSON.
+
+    Runs the smoke grid by default (the aggregator sweeps every module; the
+    full grid is ~10 min of compiles) — set ``BENCH_FULL=1`` or invoke
+    ``python -m benchmarks.bench_step_time`` directly for the full sizes.
+    Only the full grid overwrites the committed repo-root JSON; smoke rows
+    go to a scratch file so an aggregator sweep cannot degrade the
+    trajectory artifact.
+    """
+    full = bool(os.environ.get("BENCH_FULL"))
+    rows = collect(smoke=not full)
+    write_json(rows, OUT_PATH if full else os.path.join(
+        os.path.dirname(OUT_PATH), "BENCH_step_time.smoke.json"))
+    return [
+        {
+            "name": f"step_time/{r['size']}/{r['operator']}/{r['path']}/bucketed",
+            "us_per_call": r["us_bucketed"],
+            "derived": f"speedup_vs_perleaf={r['speedup']:.2f}x" if r["speedup"] else "",
+        }
+        for r in rows
+    ]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer reps (CI) — same size x operator grid")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: the committed repo-root "
+                         "file for full runs, a .smoke.json sibling for "
+                         "--smoke so the trajectory artifact is not clobbered)")
+    args = ap.parse_args(argv)
+    rows = collect(smoke=args.smoke)
+    out = args.out or (OUT_PATH if not args.smoke else os.path.join(
+        os.path.dirname(OUT_PATH), "BENCH_step_time.smoke.json"))
+    path = write_json(rows, out)
+    for r in rows:
+        pl = f"{r['us_perleaf']:10.0f}" if r["us_perleaf"] else "         -"
+        bk = f"{r['us_bucketed']:10.0f}" if r["us_bucketed"] else "         -"
+        sp = f"{r['speedup']:6.2f}x" if r["speedup"] else "      -"
+        print(f"{r['size']:7s} {r['operator']:8s} {r['path']:10s} "
+              f"perleaf{pl}us bucketed{bk}us {sp}")
+    print(f"wrote {path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,9 @@ class ModelConfig:
     comp_block: int = 2048
     comp_k: int = 64               # kept coordinates for rand-k / top-k
     comp_worker_axes: Tuple[str, ...] = ("pod", "data")
+    comp_bucketed: bool = True     # whole-model flat-buffer aggregation (one
+                                   # compress / gather / decode per step,
+                                   # repro.core.bucket); False = per-leaf
     h_dtype: Any = jnp.float32
 
     @property

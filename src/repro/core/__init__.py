@@ -19,10 +19,12 @@ from .compressors import (
     available_methods,
     make_compressor,
 )
+from .bucket import BucketLayout, BucketedCompressor, bucketed_compressor
 from .diana import (
     DianaState,
     init_state,
     aggregate_shardmap,
+    bucket_layout,
     reference_init,
     reference_step,
     tree_zeros_like,
@@ -35,6 +37,7 @@ __all__ = [
     "pack2bit", "unpack2bit", "packed_nbytes", "PACK_FACTOR",
     "CompressionConfig", "compress_tree", "decompress_tree", "payload_bits_per_dim",
     "Compressor", "Payload", "available_methods", "make_compressor",
+    "BucketLayout", "BucketedCompressor", "bucketed_compressor", "bucket_layout",
     "DianaState", "init_state", "aggregate_shardmap", "reference_init", "reference_step",
     "tree_zeros_like", "prox",
 ]

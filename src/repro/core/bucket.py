@@ -1,0 +1,265 @@
+"""Flat-buffer (bucketed) aggregation layout — one wire object per step.
+
+The paper's cost model (Sec. 2, and the per-round accounting in Horváth et
+al., 2019) counts ONE compressed message per worker per iteration; the
+per-leaf pipeline in :mod:`repro.core.diana` instead pays per-leaf costs — a
+transformer with ~100 parameter leaves issues ~100 small collectives and ~100
+kernel launches per step.  This module provides the single-vector formulation:
+
+* :class:`BucketLayout` — a static layout of a parameter pytree as ONE flat
+  f32 buffer: per-leaf offsets, segments padded to the operator's block
+  alignment (so quantization blocks never straddle leaves), tail pads only.
+* :class:`BucketedCompressor` — an adapter presenting the ordinary
+  :class:`~repro.core.compressors.Compressor` interface over that buffer by
+  delegating to the operator's ``*_bucketed`` hooks, so the whole round is
+  ONE ``compress`` call, ONE :class:`Payload`, ONE all-gather and ONE
+  ``decode_sum`` launch.
+* payload **wire fusion** (:func:`fuse_payload` / :func:`unfuse_payload`) —
+  every Payload field byte-cast into one contiguous uint8 buffer so the
+  gather really is a single collective, not one per field.
+
+Bitwise contract: the bucketed path reproduces the per-leaf path EXACTLY
+(same PRNG draws per segment, same per-block scales, same f32 summation
+order) — ``tests/test_bucket.py`` asserts equality for every registry
+operator.  The only documented exception is the TPU in-kernel-PRNG encode
+(`kernels/quantize_pack.py`), which, like the kernel encode generally, agrees
+in distribution rather than bitwise.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compressors.base import Compressor, Payload
+
+__all__ = [
+    "BucketLayout",
+    "BucketedCompressor",
+    "bucketed_compressor",
+    "fuse_payload",
+    "payload_recipe",
+    "unfuse_payload",
+]
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Static flat layout of a pytree (hashable: usable as a cache key).
+
+    treedef:      pytree structure of the source tree
+    shapes:       per-leaf shapes (tree_flatten order)
+    dtypes:       per-leaf dtypes
+    sizes:        per-leaf element counts (unpadded)
+    padded_sizes: per-leaf segment lengths, ``sizes`` rounded up to ``align``
+    offsets:      start of each leaf's segment in the flat buffer
+    align:        segment alignment (the operator's ``bucket_align()``) —
+                  blocked operators align to their block size so no
+                  quantization block straddles a leaf boundary
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    padded_sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    align: int
+
+    @classmethod
+    def for_tree(cls, tree, align: int = 1) -> "BucketLayout":
+        """Build the layout from a pytree of arrays or ShapeDtypeStructs."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(np.dtype(l.dtype) for l in leaves)
+        sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+        padded = tuple(-(-s // align) * align for s in sizes)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + padded[:-1]))
+        return cls(treedef=treedef, shapes=shapes, dtypes=dtypes, sizes=sizes,
+                   padded_sizes=padded, offsets=offsets, align=align)
+
+    # ------------------------------------------------------------ properties
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def size(self) -> int:
+        """Total unpadded element count."""
+        return sum(self.sizes)
+
+    @property
+    def padded_size(self) -> int:
+        """Length of the flat buffer (sum of aligned segments)."""
+        return sum(self.padded_sizes)
+
+    # ------------------------------------------------------------- plumbing
+
+    def flatten(self, tree) -> jax.Array:
+        """Pytree -> ONE padded flat f32 buffer (segment pads are zeros).
+
+        Unpadded layouts (align=1, the sparse/elementwise operators) lower to
+        a single fast concatenate.  Block-aligned layouts write each leaf
+        into a zeros buffer at its static offset via ``dynamic_update_slice``
+        — XLA folds the chain into in-place stores, where per-leaf
+        pad+concat pairs (or zero-interleaved concatenates) each pay per-op
+        overhead on exactly the many-small-ops pattern this layout exists to
+        remove.  (No ``jnp.pad`` anywhere on this path — DESIGN.md §6.)
+        """
+        leaves = jax.tree_util.tree_leaves(tree)
+        flats = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+        if self.padded_size == self.size:
+            return flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        buf = jnp.zeros((self.padded_size,), jnp.float32)
+        for f, off in zip(flats, self.offsets):
+            buf = jax.lax.dynamic_update_slice(buf, f, (off,))
+        return buf
+
+    def unflatten(self, flat: jax.Array, cast: bool = True):
+        """Flat buffer -> pytree (dropping segment pads).
+
+        ``cast=True`` restores the recorded leaf dtypes (the distributed
+        path); ``cast=False`` keeps f32 leaves (the reference path, matching
+        the per-leaf ``reference_step`` which never downcasts ghat).
+        """
+        outs = []
+        for off, size, shape, dt in zip(self.offsets, self.sizes, self.shapes,
+                                        self.dtypes):
+            seg = jax.lax.slice_in_dim(flat, off, off + size).reshape(shape)
+            outs.append(seg.astype(dt) if cast else seg)
+        return jax.tree_util.tree_unflatten(self.treedef, outs)
+
+    def split_padded(self, flat: jax.Array):
+        """The per-leaf padded segment views of the flat buffer."""
+        return [
+            jax.lax.slice_in_dim(flat, off, off + ps)
+            for off, ps in zip(self.offsets, self.padded_sizes)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Payload wire fusion: one uint8 buffer per gather
+# ---------------------------------------------------------------------------
+
+def payload_recipe(pay: Payload):
+    """Static (field, shape, dtype) description used to un-fuse the buffer."""
+    return tuple(
+        (i, tuple(f.shape), np.dtype(f.dtype))
+        for i, f in enumerate(pay) if f is not None
+    )
+
+
+def fuse_payload(pay: Payload) -> jax.Array:
+    """Byte-cast and concatenate every populated field into ONE uint8 buffer
+    of shape ``(lead, W)`` (``lead`` = the fields' shared leading dim), so the
+    worker all-gather is literally a single collective.  ``bitcast`` is
+    exact, so fusion cannot perturb the bitwise decode contract."""
+    parts = []
+    lead = None
+    for f in pay:
+        if f is None:
+            continue
+        lead = f.shape[0] if lead is None else lead
+        assert f.shape[0] == lead, "payload fields must share the leading dim"
+        b = jax.lax.bitcast_convert_type(f, jnp.uint8)
+        parts.append(b.reshape(lead, -1))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def unfuse_payload(buf: jax.Array, recipe) -> Payload:
+    """Inverse of :func:`fuse_payload`; tolerates extra leading (worker) dims
+    on ``buf`` from the gather."""
+    batch = buf.shape[:-2]
+    fields: list = [None] * len(Payload._fields)
+    start = 0
+    for fi, shape, dt in recipe:
+        width = int(np.prod(shape[1:], dtype=np.int64)) * dt.itemsize
+        part = jax.lax.slice_in_dim(buf, start, start + width, axis=buf.ndim - 1)
+        start += width
+        if dt.itemsize == 1:
+            fields[fi] = part.reshape(*batch, *shape).astype(dt)
+        else:
+            part = part.reshape(*batch, *shape, dt.itemsize)
+            fields[fi] = jax.lax.bitcast_convert_type(part, dt)
+    return Payload(*fields)
+
+
+# ---------------------------------------------------------------------------
+# The bucketed compressor adapter
+# ---------------------------------------------------------------------------
+
+class BucketedCompressor(Compressor):
+    """A :class:`Compressor` over a :class:`BucketLayout`'s single flat buffer.
+
+    Thin adapter: the per-operator behaviour lives in the operator's own
+    ``*_bucketed`` hooks (operator-owned, like the memory rules); this class
+    only binds the layout and keeps :mod:`repro.core.diana` free of any
+    layout-vs-per-leaf switching beyond the config flag.  Holds no traced
+    values, so instances are safely cached per ``(config, layout)``.
+    """
+
+    def __init__(self, base: Compressor, layout: BucketLayout):
+        self.base = base
+        self.layout = layout
+        self.name = f"bucketed:{base.name}"
+        self.unbiased = base.unbiased
+        self.carries_state = base.carries_state
+        self.use_kernel = base.use_kernel
+        self.prefers_allreduce = base.prefers_allreduce
+
+    # ---------------------------------------------------------------- wire
+
+    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
+        return self.base.compress_bucketed(self.layout, delta, key)
+
+    def decode(self, payload: Payload, d: Optional[int] = None) -> jax.Array:
+        return self.base.decode_bucketed(self.layout, payload)
+
+    def decode_sum(self, gathered: Payload, n: int, d: Optional[int] = None) -> jax.Array:
+        return self.base.decode_sum_bucketed(self.layout, gathered, n)
+
+    def bits_per_dim(self, d: Optional[int] = None) -> float:
+        """Size-weighted mean of the per-leaf costs (honest accounting: the
+        sparse operators' cost depends on each leaf's length)."""
+        lay = self.layout
+        return sum(
+            self.base.bits_per_dim(s) * s for s in lay.sizes
+        ) / max(lay.size, 1)
+
+    # -------------------------------------------------------- memory rule
+
+    def memory_alpha(self, d: Optional[int] = None) -> float:
+        return self.base.memory_alpha(d)
+
+    def compress_input(self, g: jax.Array, h: jax.Array) -> jax.Array:
+        return self.base.compress_input(g, h)
+
+    def next_memory(self, h, dhat, delta):
+        if type(self.base).next_memory is not Compressor.next_memory:
+            return self.base.next_memory(h, dhat, delta)  # e.g. EF residual
+        if not self.carries_state:
+            return h
+        return h + self.base.bucketed_alpha(self.layout) * dhat
+
+    def next_server_memory(self, h, dhat_mean):
+        if type(self.base).next_server_memory is not Compressor.next_server_memory:
+            return self.base.next_server_memory(h, dhat_mean)
+        if not self.carries_state:
+            return h
+        return h + self.base.bucketed_alpha(self.layout) * dhat_mean
+
+    def server_direction(self, h, dhat_mean):
+        return self.base.server_direction(h, dhat_mean)
+
+
+@functools.lru_cache(maxsize=None)
+def bucketed_compressor(cfg, layout: BucketLayout) -> BucketedCompressor:
+    """Cached ``(CompressionConfig, BucketLayout) -> BucketedCompressor`` —
+    the bucketed analogue of the memoized ``CompressionConfig.make()``."""
+    return BucketedCompressor(cfg.make(), layout)

@@ -15,6 +15,7 @@ expressed as registry entries over the ternary/identity operators.
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from typing import Any, Optional
@@ -58,6 +59,10 @@ class CompressionConfig:
     worker_axes: mesh axes whose product forms the DIANA worker set.
     use_kernel:  Pallas-kernel capability for kernel-backed operators.
                  None = auto (kernels on TPU, pure-jnp elsewhere).
+    bucketed:    aggregate the whole model as ONE flat buffer (one compress,
+                 one all-gather, one decode_sum per step — repro.core.bucket)
+                 instead of per-leaf.  Bitwise-equal results either way; the
+                 flag only selects the execution layout.
     """
 
     method: str = "diana"
@@ -68,6 +73,7 @@ class CompressionConfig:
     h_dtype: Any = jnp.float32
     worker_axes: tuple = ("pod", "data")
     use_kernel: Optional[bool] = None
+    bucketed: bool = False
 
     def __post_init__(self):
         canonical_name(self.method)  # raises on unknown methods
@@ -77,8 +83,17 @@ class CompressionConfig:
     # ------------------------------------------------------------- factory
 
     def make(self):
-        """Build the configured :class:`~repro.core.compressors.Compressor`."""
-        return make_compressor(self)
+        """Build (memoized) the configured
+        :class:`~repro.core.compressors.Compressor`.
+
+        ``make()`` is called on every traced step (``_aggregate_local`` and
+        ``aggregate_shardmap``, plus the reference path), so instances are
+        cached per config — the dataclass is frozen/hashable and compressors
+        are stateless, which makes sharing safe.  The ``use_kernel=None``
+        backend auto-detection is resolved once per process, which is the
+        intended semantics (the backend cannot change under a live process).
+        """
+        return _make_cached(self)
 
     # ----------------------------------------------- legacy introspection
 
@@ -103,6 +118,11 @@ class CompressionConfig:
     def theory_alpha_p(self) -> float:
         """alpha_p(d~) of the largest block — drives every rate in the paper."""
         return alpha_p(self.effective_p(), self.block_size)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_cached(cfg: "CompressionConfig"):
+    return make_compressor(cfg)
 
 
 # ---------------------------------------------------------------------------

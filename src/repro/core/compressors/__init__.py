@@ -5,7 +5,7 @@ registry maps ``CompressionConfig.method`` strings (including the legacy
 diana/qsgd/terngrad/dqgd/none aliases) to operator instances.
 """
 
-from .base import Compressor, Payload, payload_nbits
+from .base import Compressor, Payload, index_dtype, index_nbits, payload_nbits
 from .identity import IdentityCompressor
 from .natural import NaturalCompressor
 from .randk import RandKCompressor
@@ -20,7 +20,7 @@ from .ternary import TernaryCompressor
 from .topk_ef import TopKEFCompressor
 
 __all__ = [
-    "Compressor", "Payload", "payload_nbits",
+    "Compressor", "Payload", "payload_nbits", "index_dtype", "index_nbits",
     "TernaryCompressor", "NaturalCompressor", "RandKCompressor",
     "TopKEFCompressor", "IdentityCompressor",
     "register", "alias", "make_compressor", "canonical_name", "available_methods",

@@ -27,7 +27,26 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Payload", "Compressor", "payload_nbits"]
+__all__ = ["Payload", "Compressor", "payload_nbits", "index_dtype", "index_nbits"]
+
+
+def index_dtype(d: int):
+    """Narrowest unsigned integer dtype that can address ``d`` coordinates.
+
+    Sparse payloads (rand-k / top-k) carry their coordinate indices in this
+    dtype, so the wire cost of an index is 8/16/32 bits depending on the
+    vector length instead of a flat 32.
+    """
+    if d <= (1 << 8):
+        return jnp.uint8
+    if d <= (1 << 16):
+        return jnp.uint16
+    return jnp.uint32
+
+
+def index_nbits(d: int) -> int:
+    """Wire bits of one coordinate index of a length-``d`` vector."""
+    return jnp.dtype(index_dtype(d)).itemsize * 8
 
 
 class Payload(NamedTuple):
@@ -145,3 +164,103 @@ class Compressor:
     def server_direction(self, h: jax.Array, dhat_mean: jax.Array) -> jax.Array:
         """The aggregated estimator ``ghat^k`` (Algorithm 1 line 8)."""
         return h + dhat_mean if self.carries_state else dhat_mean
+
+    # ------------------------------------------------- bucketed (flat) hooks
+    #
+    # The bucketed pipeline (repro.core.bucket) runs the WHOLE model as one
+    # flat buffer: one compress, one Payload, one all-gather, one decode_sum
+    # per step.  These hooks define how an operator acts on that buffer given
+    # its static `BucketLayout`.  The contract: the bucketed result is
+    # BITWISE-equal to the per-leaf path, which the defaults guarantee by
+    # re-deriving the per-leaf PRNG schedule (`split(key, n_leaves)`, segment
+    # i draws with keys[i] — exactly what core.diana's per-leaf path does) and
+    # reusing `compress`/`decode` per segment.  Operators override these with
+    # fused single-call implementations that preserve the same draws and the
+    # same f32 recurrences.
+
+    def bucket_align(self) -> int:
+        """Segment alignment of the flat layout: every leaf's segment is
+        padded to a multiple of this.  Blocked operators return their block
+        size so quantization blocks never straddle leaves (which keeps the
+        per-block scales — and hence the whole wire format — identical to the
+        per-leaf path); element-wise and sparse operators need no padding."""
+        return 1
+
+    def _segment_payloads(self, layout):
+        """Static per-segment Payload shapes (via eval_shape on compress)."""
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        return [
+            jax.eval_shape(
+                self.compress, jax.ShapeDtypeStruct((size,), jnp.float32), key
+            )
+            for size in layout.padded_sizes
+        ]
+
+    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+        """Encode the whole padded flat buffer ``delta`` into ONE Payload.
+
+        Generic fallback: per-segment :meth:`compress` with the per-leaf key
+        schedule, every field concatenated along axis 0 (segment indices stay
+        segment-local; :meth:`decode_bucketed` splits them back).  Correct for
+        any operator, but per-segment work — fused overrides are where the
+        single-kernel-launch win comes from.
+        """
+        keys = jax.random.split(key, layout.n_leaves)
+        pays = [
+            self.compress(seg, k)
+            for seg, k in zip(layout.split_padded(delta), keys)
+        ]
+        fields = []
+        for i in range(len(Payload._fields)):
+            fs = [p[i] for p in pays]
+            if any(f is None for f in fs):
+                fields.append(None)
+            else:
+                fields.append(jnp.concatenate(fs, axis=0))
+        return Payload(*fields)
+
+    def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
+        """Decode ONE worker's bucketed payload to the padded flat buffer."""
+        seg_shapes = self._segment_payloads(layout)
+        offs = [0] * len(Payload._fields)
+        outs = []
+        for seg, size in zip(seg_shapes, layout.padded_sizes):
+            parts = []
+            for fi, f in enumerate(seg):
+                if f is None:
+                    parts.append(None)
+                else:
+                    n_i = f.shape[0]
+                    parts.append(
+                        jax.lax.slice_in_dim(payload[fi], offs[fi], offs[fi] + n_i, axis=0)
+                    )
+                    offs[fi] += n_i
+            outs.append(self.decode(Payload(*parts), size))
+        return jnp.concatenate(outs)
+
+    def decode_sum_bucketed(self, layout, gathered: Payload, n: int) -> jax.Array:
+        """``sum_i decode_bucketed(payload_i)`` over the gathered worker axis —
+        the same sequential f32 recurrence as :meth:`decode_sum`, so the
+        bucketed reference and distributed paths stay bitwise-aligned."""
+        acc = self.decode_bucketed(layout, gathered.select(0))
+        for i in range(1, n):
+            acc = acc + self.decode_bucketed(layout, gathered.select(i))
+        return acc
+
+    def bucketed_alpha(self, layout):
+        """Per-coordinate memory rate over the padded flat buffer.
+
+        A scalar when the operator's alpha is d-independent (the common case,
+        bitwise-identical to the per-leaf scalar multiply); a constant vector
+        mapping each segment to ``memory_alpha(d_leaf)`` for operators like
+        rand-k whose rate depends on the leaf length.
+        """
+        import numpy as np
+
+        alphas = [self.memory_alpha(s) for s in layout.sizes]
+        if len(set(alphas)) <= 1:
+            return alphas[0] if alphas else 0.0
+        return jnp.asarray(np.concatenate([
+            np.full(ps, a, np.float32)
+            for ps, a in zip(layout.padded_sizes, alphas)
+        ]))

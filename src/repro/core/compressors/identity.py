@@ -33,3 +33,12 @@ class IdentityCompressor(Compressor):
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         return 32.0
+
+    # ------------------------------------------------- bucketed (flat) path
+
+    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+        del key
+        return Payload(values=delta.astype(jnp.float32))
+
+    def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
+        return payload.values

@@ -42,16 +42,21 @@ class NaturalCompressor(Compressor):
 
     # ---------------------------------------------------------------- wire
 
-    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
-        x = delta.astype(jnp.float32)
+    @staticmethod
+    def _encode(x: jax.Array, u: jax.Array) -> Payload:
+        """PRNG-free encode body given the uniform draws (shared with the
+        bucketed path, which concatenates per-segment draws)."""
         mant, expo = jnp.frexp(x)                     # x = mant * 2^expo, |mant| in [0.5, 1)
         # |x| in [2^(e-1), 2^e): round up to 2^e w.p. 2|mant| - 1 (unbiased)
         p_up = 2.0 * jnp.abs(mant) - 1.0
-        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
         chosen = expo - 1 + (u < p_up).astype(expo.dtype)
         sign = jnp.sign(x).astype(jnp.int16)
         code = sign * (chosen.astype(jnp.int16) + jnp.int16(_BIAS))
         return Payload(packed=jnp.where(x == 0.0, jnp.int16(0), code))
+
+    def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
+        x = delta.astype(jnp.float32)
+        return self._encode(x, jax.random.uniform(key, x.shape, dtype=jnp.float32))
 
     def decode(self, payload: Payload, d: int) -> jax.Array:
         code = payload.packed
@@ -62,6 +67,22 @@ class NaturalCompressor(Compressor):
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         return 9.0  # sign + 8-bit exponent (int16 is only the container)
+
+    # ------------------------------------------------- bucketed (flat) path
+
+    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+        """ONE vectorized encode over the whole buffer; per-segment uniforms
+        drawn with the per-leaf key schedule so codes match the per-leaf path
+        bitwise (alignment is 1: segments are unpadded and contiguous)."""
+        keys = jax.random.split(key, layout.n_leaves)
+        u = jnp.concatenate([
+            jax.random.uniform(k, (s,), dtype=jnp.float32)
+            for k, s in zip(keys, layout.padded_sizes)
+        ])
+        return self._encode(delta.astype(jnp.float32), u)
+
+    def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
+        return self.decode(payload, layout.padded_size)
 
     # -------------------------------------------------------- memory rule
 

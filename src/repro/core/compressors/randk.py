@@ -2,13 +2,19 @@
 
 Picks ``k`` coordinates uniformly without replacement and rescales by ``d/k``,
 giving the unbiased estimator ``(d/k) * sum_{j in S} x_j e_j`` with variance
-bound ``omega = d/k - 1``.  Wire format: ``indices`` (int32) + ``values``
-(f32) — ``64k/d`` bits/dim.
+bound ``omega = d/k - 1``.  Wire format: ``indices`` (the narrowest unsigned
+integer dtype that covers ``d`` — 8/16/32 bits) + ``values`` (f32), i.e.
+``(32 + index_bits(d)) * k / d`` bits/dim.
 
 The values travel UNscaled; the ``d/k`` correction is applied at decode where
 ``d`` is known, so the same payload is valid for any transport.  Default
 memory rate ``alpha = 1/(1 + omega) = k/d`` (per leaf) plugs the operator into
 DIANA's memory loop as in Horvath et al. 2019 (arXiv:1904.05115).
+
+Bucketed path: one payload for the whole model — per-segment index draws with
+the per-leaf key schedule, offset into global coordinates, decoded by a
+SINGLE scatter-add with a static per-entry ``d_leaf/k_leaf`` scale vector
+(bitwise the same f32 products and disjoint adds as the per-leaf decodes).
 """
 
 from __future__ import annotations
@@ -17,8 +23,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .base import Compressor, Payload
+from .base import Compressor, Payload, index_dtype, index_nbits
 
 __all__ = ["RandKCompressor"]
 
@@ -42,7 +49,7 @@ class RandKCompressor(Compressor):
     def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
         d = delta.shape[0]
         idx = jax.random.choice(key, d, (self._k(d),), replace=False)
-        idx = idx.astype(jnp.int32)
+        idx = idx.astype(index_dtype(d))
         return Payload(indices=idx, values=delta.astype(jnp.float32)[idx])
 
     def decode(self, payload: Payload, d: int) -> jax.Array:
@@ -52,8 +59,33 @@ class RandKCompressor(Compressor):
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         if d is None:
-            return 64.0  # per transmitted coordinate (index + value)
-        return 64.0 * self._k(d) / d
+            return 64.0  # per transmitted coordinate (32-bit index + value bound)
+        return float(32 + index_nbits(d)) * self._k(d) / d
+
+    # ------------------------------------------------- bucketed (flat) path
+
+    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+        keys = jax.random.split(key, layout.n_leaves)
+        parts = []
+        for k, off, d in zip(keys, layout.offsets, layout.sizes):
+            idx = jax.random.choice(k, d, (self._k(d),), replace=False)
+            parts.append(jnp.int32(off) + idx.astype(jnp.int32))
+        gidx = jnp.concatenate(parts).astype(index_dtype(layout.padded_size))
+        return Payload(indices=gidx, values=delta.astype(jnp.float32)[gidx])
+
+    def _bucket_scales(self, layout) -> jax.Array:
+        """Static per-entry decode scale: ``d_leaf / k_leaf`` for each kept
+        coordinate — the same f32 factor the per-leaf decode multiplies by."""
+        return jnp.asarray(np.concatenate([
+            np.full(self._k(d), np.float32(d / self._k(d)), np.float32)
+            for d in layout.sizes
+        ]))
+
+    def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
+        scaled = payload.values * self._bucket_scales(layout)
+        return jnp.zeros(
+            (layout.padded_size,), jnp.float32
+        ).at[payload.indices].add(scaled)
 
     # -------------------------------------------------------- memory rule
 

@@ -2,11 +2,13 @@
 
 Canonical operators:
 
-    ternary   2 + 32/B bits/dim   unbiased   alpha-memory (DIANA)
-    natural   9 bits/dim          unbiased   alpha-memory (omega = 1/8)
-    randk     64k/d bits/dim      unbiased   alpha-memory (alpha = k/d)
-    topk_ef   64k/d bits/dim      biased     error-feedback residual
-    identity  32 bits/dim         exact      stateless
+    ternary   2 + 32/B bits/dim          unbiased   alpha-memory (DIANA)
+    natural   9 bits/dim                 unbiased   alpha-memory (omega = 1/8)
+    randk     (32+idx(d))k/d bits/dim    unbiased   alpha-memory (alpha = k/d)
+    topk_ef   (32+idx(d))k/d bits/dim    biased     error-feedback residual
+    identity  32 bits/dim                exact      stateless
+
+(idx(d) = 8/16/32 — indices ride in the narrowest unsigned dtype covering d.)
 
 Legacy ``CompressionConfig.method`` strings stay valid as aliases resolving to
 a canonical operator plus overrides (the paper's Sec. 3 special cases):

@@ -20,7 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from ..packing import pack2bit, unpack2bit
-from ..quantization import alpha_p, num_blocks, pad_to_blocks, quantize_blocks
+from ..quantization import (
+    alpha_p,
+    num_blocks,
+    pad_to_blocks,
+    quantize_blocks,
+    quantize_blocks_from_uniform,
+)
 from .base import Compressor, Payload
 
 __all__ = ["TernaryCompressor"]
@@ -68,8 +74,14 @@ class TernaryCompressor(Compressor):
             from repro.kernels import ops as _kops
 
             blocks = pad_to_blocks(delta.astype(jnp.float32), self.block_size)
-            bits = jax.random.bits(key, blocks.shape, dtype=jnp.uint32)
-            packed, scales = _kops.quantize_pack_op(blocks, bits, p=self.p)
+            if _kops.default_interpret():
+                bits = jax.random.bits(key, blocks.shape, dtype=jnp.uint32)
+                packed, scales = _kops.quantize_pack_op(blocks, bits, p=self.p)
+            else:
+                # Compiled TPU path: the Bernoulli bits are drawn INSIDE the
+                # kernel (pltpu.prng_random_bits), so the uint32 bits operand
+                # — 4 bytes/dim of pure HBM input traffic — never exists.
+                packed, scales = _kops.quantize_pack_prng_op(blocks, key, p=self.p)
             return Payload(packed=packed, scales=scales[:, 0])
         q = quantize_blocks(delta, key, p=self.p, block_size=self.block_size)
         return Payload(packed=pack2bit(q.signs), scales=q.scales)
@@ -104,6 +116,65 @@ class TernaryCompressor(Compressor):
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         return 2.0 + 32.0 / self.block_size
+
+    # ------------------------------------------------- bucketed (flat) path
+
+    def bucket_align(self) -> int:
+        """Segments align to the quantization block, so every block of the
+        flat buffer belongs to exactly one leaf and the per-block scales are
+        identical to the per-leaf path's (bitwise wire-format equality)."""
+        return self.block_size
+
+    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+        """ONE fused quantize+pack over the whole model's block matrix.
+
+        The per-leaf PRNG schedule is preserved exactly: segment ``i`` draws
+        its bits/uniforms from ``split(key, n_leaves)[i]`` over its own padded
+        block rows — the same draws the per-leaf path makes — and the single
+        kernel launch (or vectorized jnp quantization) consumes the
+        concatenation.  On compiled TPU the bits are instead drawn in-kernel
+        (one PRNG stream for the whole buffer): distribution-equal, bitwise
+        only within that mode.
+        """
+        blocks = delta.astype(jnp.float32).reshape(-1, self.block_size)
+        keys = jax.random.split(key, layout.n_leaves)
+        seg_rows = [ps // self.block_size for ps in layout.padded_sizes]
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            if _kops.default_interpret():
+                bits = jnp.concatenate([
+                    jax.random.bits(k, (m, self.block_size), dtype=jnp.uint32)
+                    for k, m in zip(keys, seg_rows)
+                ])
+                packed, scales = _kops.quantize_pack_op(blocks, bits, p=self.p)
+            else:
+                packed, scales = _kops.quantize_pack_prng_op(blocks, key, p=self.p)
+            return Payload(packed=packed, scales=scales[:, 0])
+        # jnp path: quantize per segment and concatenate only the 2-bit wire
+        # format (16x smaller than the f32 intermediates) — XLA then fuses
+        # each segment's quantize+pack like the per-leaf path does, instead
+        # of materialising whole-model f32 buffers.  Per-block independence
+        # makes this bitwise-identical to one fused call.
+        packed_parts, scale_parts = [], []
+        row = 0
+        for k, m in zip(keys, seg_rows):
+            seg = jax.lax.slice_in_dim(blocks, row, row + m)
+            row += m
+            u = jax.random.uniform(k, (m, self.block_size), dtype=jnp.float32)
+            q = quantize_blocks_from_uniform(seg, u, p=self.p)
+            packed_parts.append(pack2bit(q.signs))
+            scale_parts.append(q.scales)
+        return Payload(packed=jnp.concatenate(packed_parts),
+                       scales=jnp.concatenate(scale_parts))
+
+    def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
+        return self.decode(payload, layout.padded_size)
+
+    def decode_sum_bucketed(self, layout, gathered: Payload, n: int) -> jax.Array:
+        """ONE ``unpack_reduce`` launch (or one unrolled accumulate) over the
+        whole model — the per-step decode cost the ISSUE's motivation counts."""
+        return self.decode_sum(gathered, n, layout.padded_size)
 
     # -------------------------------------------------------- memory rule
 

@@ -10,6 +10,7 @@ compressor and not the aggregation loop.
 
 Wire format: ``indices`` + ``values``, like rand-k but with NO ``d/k``
 rescale (the selection is deterministic, rescaling would only add bias).
+Indices use the narrowest unsigned dtype covering ``d`` (8/16/32 bits).
 """
 
 from __future__ import annotations
@@ -19,7 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .base import Compressor, Payload
+from .base import Compressor, Payload, index_dtype, index_nbits
 
 __all__ = ["TopKEFCompressor"]
 
@@ -41,7 +42,7 @@ class TopKEFCompressor(Compressor):
         d = delta.shape[0]
         kk = min(self.k, d)
         _, idx = jax.lax.top_k(jnp.abs(delta), kk)
-        idx = idx.astype(jnp.int32)
+        idx = idx.astype(index_dtype(d))
         return Payload(indices=idx, values=delta.astype(jnp.float32)[idx])
 
     def decode(self, payload: Payload, d: int) -> jax.Array:
@@ -50,7 +51,28 @@ class TopKEFCompressor(Compressor):
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         if d is None:
             return 64.0
-        return 64.0 * min(self.k, d) / d
+        return float(32 + index_nbits(d)) * min(self.k, d) / d
+
+    # ------------------------------------------------- bucketed (flat) path
+
+    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+        """Per-segment top-k (deterministic, cheap local selections) fused
+        into ONE global-coordinate payload; the error-feedback memory hooks
+        are elementwise and run on the flat buffer unchanged."""
+        del key
+        x = delta.astype(jnp.float32)
+        parts = []
+        for off, d in zip(layout.offsets, layout.sizes):
+            seg = jax.lax.slice_in_dim(x, off, off + d)
+            _, idx = jax.lax.top_k(jnp.abs(seg), min(self.k, d))
+            parts.append(jnp.int32(off) + idx.astype(jnp.int32))
+        gidx = jnp.concatenate(parts).astype(index_dtype(layout.padded_size))
+        return Payload(indices=gidx, values=x[gidx])
+
+    def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
+        return jnp.zeros(
+            (layout.padded_size,), jnp.float32
+        ).at[payload.indices].add(payload.values)
 
     # ------------------------------------------------ error-feedback rule
 

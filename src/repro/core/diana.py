@@ -33,6 +33,7 @@ from typing import Any, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from .bucket import BucketLayout, bucketed_compressor, fuse_payload, payload_recipe, unfuse_payload
 from .compression import CompressionConfig
 from .compressors import Compressor, Payload
 
@@ -43,6 +44,7 @@ __all__ = [
     "reference_init",
     "reference_step",
     "tree_zeros_like",
+    "bucket_layout",
 ]
 
 
@@ -59,26 +61,43 @@ def _is_payload(t) -> bool:
 class DianaState(NamedTuple):
     """Compressor state carried by the training loop.
 
-    Memories are stored FLAT (one 1-D leaf per param leaf, sharded evenly over
-    the 'model' axis) — the same layout compression operates in, so the
-    entire compress -> gather -> decode -> h-update path is layout-local; the
-    only relayouts per step are grads->flat and ghat->param-shape (both over
-    the fast intra-pod ICI; see DESIGN.md §Perf notes).
+    Memories are stored FLAT — the same layout compression operates in, so
+    the entire compress -> gather -> decode -> h-update path is layout-local;
+    the only relayouts per step are grads->flat and ghat->param-shape (both
+    over the fast intra-pod ICI; see DESIGN.md §Perf notes).  Two layouts:
 
-    h_worker: pytree of (n_workers, d_leaf) f32/bf16 — axis 0 sharded over the
-              worker mesh axes (each worker holds only its own memory).  The
-              paper's h_i for alpha-memory operators; the error-feedback
-              residual e_i for top-k EF; inert zeros for memoryless ones.
-    h_server: pytree of (d_leaf,) — replicated over worker axes — the paper's
-              server-side ``h^k = mean_i h_i^k``.
+    * per-leaf (``cfg.bucketed=False``): one 1-D leaf per param leaf —
+      h_worker a pytree of ``(n_workers, d_leaf)``, h_server of ``(d_leaf,)``.
+    * bucketed (``cfg.bucketed=True``): the whole model in ONE buffer of
+      length ``Dp`` (the :class:`~repro.core.bucket.BucketLayout` padded
+      size) — h_worker a single ``(n_workers, Dp)`` array, h_server ``(Dp,)``,
+      updated by one vectorized elementwise op per step.
+
+    h_worker axis 0 is sharded over the worker mesh axes (each worker holds
+    only its own memory): the paper's h_i for alpha-memory operators, the
+    error-feedback residual e_i for top-k EF, inert zeros for memoryless
+    ones.  h_server is replicated over worker axes — the paper's server-side
+    ``h^k = mean_i h_i^k``.
     """
 
     h_worker: Any
     h_server: Any
 
 
+def bucket_layout(cfg: CompressionConfig, tree) -> BucketLayout:
+    """The flat-buffer layout of ``tree`` under ``cfg``'s operator (segment
+    alignment is the operator's ``bucket_align()``)."""
+    return BucketLayout.for_tree(tree, align=cfg.make().bucket_align())
+
+
 def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
     """h_i^0 = 0 (the paper's experimental choice) for all operators."""
+    if cfg.bucketed:
+        dp = bucket_layout(cfg, params).padded_size
+        return DianaState(
+            h_worker=jnp.zeros((n_workers, dp), cfg.h_dtype),
+            h_server=jnp.zeros((dp,), cfg.h_dtype),
+        )
     h_w = jax.tree_util.tree_map(
         lambda p: jnp.zeros((n_workers, p.size), cfg.h_dtype), params
     )
@@ -90,25 +109,30 @@ def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
 # Distributed aggregation (inside shard_map over worker axes)
 # ---------------------------------------------------------------------------
 
-def _gather_payloads(payload_tree, axis_names):
-    """All-gather every array field of every per-leaf :class:`Payload`.
+def _gather_field(a, axis_names):
+    """All-gather ONE payload field over the worker axes.
 
-    The gathered buffers are explicitly re-constrained to stay sharded over
+    The gathered buffer is explicitly re-constrained to stay sharded over
     'model' on the post-worker dim — ``all_gather`` output sharding does not
     propagate the auto axes by itself and would otherwise replicate the
     payload n times per device.
     """
     from repro.models.sharding import shard
 
-    def gather_field(a):
-        out = (
-            jax.lax.all_gather(a, axis_names, tiled=False)
-            if axis_names else a[None]
-        )
-        return shard(out, None, "model", *(None,) * (out.ndim - 2))
+    out = (
+        jax.lax.all_gather(a, axis_names, tiled=False)
+        if axis_names else a[None]
+    )
+    return shard(out, None, "model", *(None,) * (out.ndim - 2))
+
+
+def _gather_payloads(payload_tree, axis_names):
+    """All-gather every array field of every per-leaf :class:`Payload`."""
 
     def gather_leaf(pay: Payload) -> Payload:
-        return Payload(*(None if f is None else gather_field(f) for f in pay))
+        return Payload(*(
+            None if f is None else _gather_field(f, axis_names) for f in pay
+        ))
 
     return jax.tree_util.tree_map(gather_leaf, payload_tree, is_leaf=_is_payload)
 
@@ -185,6 +209,64 @@ def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_wo
     return ghat, new_hw, new_h_server
 
 
+def _gather_fused(payload: Payload, axis_names):
+    """All-gather ONE fused uint8 buffer instead of one collective per field.
+
+    Every populated Payload field is byte-cast into a single contiguous
+    buffer (:func:`repro.core.bucket.fuse_payload` — exact, bitcast only),
+    gathered once over the worker axes, and split back locally — so the whole
+    DIANA round really costs one collective, which the trace test in
+    ``tests/test_bucket.py`` counts.
+    """
+    populated = [i for i, f in enumerate(payload) if f is not None]
+    if len(populated) == 1:
+        # one field IS one collective — skip the byte-cast round-trip, which
+        # XLA CPU lowers as slow elementwise loops on full-size payloads
+        # (e.g. natural's whole-model int16 codes)
+        i = populated[0]
+        fields = [None] * len(Payload._fields)
+        fields[i] = _gather_field(payload[i], axis_names)
+        return Payload(*fields)
+
+    buf = fuse_payload(payload)
+    recipe = payload_recipe(payload)
+    return unfuse_payload(_gather_field(buf, axis_names), recipe)
+
+
+def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names, n_workers):
+    """Algorithm-1 round on the WHOLE model as one flat buffer.
+
+    The single-vector formulation of the paper: grads flatten once into the
+    static :class:`~repro.core.bucket.BucketLayout`, then the round is ONE
+    ``compress`` (one kernel launch for kernel-backed operators), ONE fused
+    all-gather, ONE ``decode_sum``, and vectorized elementwise memory
+    updates on the flat ``h`` buffers.  Bitwise-equal to
+    :func:`_aggregate_local` (the bucketed hooks reproduce the per-leaf PRNG
+    schedule and f32 recurrences — see repro.core.bucket).
+    """
+    layout = bucket_layout(cfg, grads_local)
+    comp = bucketed_compressor(cfg, layout)
+    dp = layout.padded_size
+
+    g_flat = layout.flatten(grads_local)                 # (Dp,) f32
+    h_local = h_worker[0].astype(jnp.float32)            # (Dp,)
+    delta = comp.compress_input(g_flat, h_local)
+
+    payload = comp.compress(delta, key)                  # ONE Payload
+    dhat_own = comp.decode(payload, dp)
+
+    gathered = _gather_fused(payload, axis_names)        # ONE collective
+    dhat_mean = comp.decode_sum(gathered, n_workers, dp) / n_workers
+
+    new_hw = comp.next_memory(h_local, dhat_own, delta).astype(cfg.h_dtype)[None]
+    new_hs = comp.next_server_memory(
+        h_server.astype(jnp.float32), dhat_mean
+    ).astype(cfg.h_dtype)
+    ghat_flat = comp.server_direction(h_server.astype(jnp.float32), dhat_mean)
+    ghat = layout.unflatten(ghat_flat, cast=True)
+    return ghat, new_hw, new_hs
+
+
 def aggregate_shardmap(
     grads_local,
     state: DianaState,
@@ -203,6 +285,13 @@ def aggregate_shardmap(
     grads_local — this worker's local gradient pytree (g_i^k).
     state.h_worker leaves arrive with local leading dim 1 (own memory only).
     key          — already folded with the worker index (deterministic stream).
+
+    With ``cfg.bucketed`` the round runs on the whole-model flat buffer
+    (:func:`_aggregate_bucketed`: one compress, one fused all-gather, one
+    decode_sum) and ``state`` must carry the bucketed single-buffer layout
+    from :func:`init_state`; callers on toolchains where that cannot lower
+    (live auto inner axes on old XLA) must downgrade the config first —
+    ``repro.launch.train.resolve_bucketed`` owns that decision.
 
     When ``inner_axes`` (the non-worker mesh axes, e.g. ('model',) or
     ('data','model')) are given together with per-leaf PartitionSpecs, the
@@ -228,6 +317,19 @@ def aggregate_shardmap(
             grads_local,
         )
         return ghat, state
+
+    if cfg.bucketed:
+        # The flat buffer is ONE global object, so the bucketed round always
+        # runs with the inner (non-worker) axes auto: GSPMD relayouts the
+        # leaf shards into/out of the buffer over fast intra-pod ICI, and the
+        # nested fully-manual mode (whose point is per-leaf shard-local
+        # encode/decode) does not apply — a shard-local sub-layout is future
+        # work, tracked in DESIGN.md §Perf.
+        ghat, new_hw, new_hs = _aggregate_bucketed(
+            grads_local, state.h_worker, state.h_server, key, cfg,
+            axis_names, n_workers,
+        )
+        return ghat, DianaState(h_worker=new_hw, h_server=new_hs)
 
     if not inner_axes or grad_specs is None:
         # single-device / tests: everything already local
@@ -270,12 +372,20 @@ def aggregate_shardmap(
 # ---------------------------------------------------------------------------
 
 class ReferenceState(NamedTuple):
-    h_worker: Any  # (n, d) per leaf — flat, mirroring DianaState
-    h_server: Any  # (d,) per leaf — flat
+    h_worker: Any  # (n, d) per leaf — flat, mirroring DianaState (or ONE
+                   # (n, Dp) buffer in bucketed mode)
+    h_server: Any  # (d,) per leaf — flat (or (Dp,) bucketed)
     v: Any         # momentum buffer, like params
 
 
 def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceState:
+    if cfg.bucketed:
+        dp = bucket_layout(cfg, params).padded_size
+        return ReferenceState(
+            h_worker=jnp.zeros((n_workers, dp), jnp.float32),
+            h_server=jnp.zeros((dp,), jnp.float32),
+            v=tree_zeros_like(params, jnp.float32),
+        )
     return ReferenceState(
         h_worker=jax.tree_util.tree_map(
             lambda p: jnp.zeros((n_workers, p.size), jnp.float32), params
@@ -298,13 +408,24 @@ def reference_step(
     """Aggregate stacked per-worker grads (n, ...) exactly as Algorithm 1.
 
     Bit-for-bit aligned with :func:`aggregate_shardmap`: worker ``i`` draws
-    from ``fold_in(key, i)`` through the same per-leaf compress path, and the
-    mean runs through the same :meth:`Compressor.decode_sum` sequential f32
-    recurrence as the distributed decode — tests assert exact equality
-    between the two.
+    from ``fold_in(key, i)`` through the same compress path (per-leaf or
+    bucketed, by ``cfg.bucketed``), and the mean runs through the same
+    :meth:`Compressor.decode_sum` sequential f32 recurrence as the
+    distributed decode — tests assert exact equality between the two, and
+    between the two layouts.
+
+    The bucketed path scans over workers (``lax.scan``: one traced body
+    regardless of n).  The per-leaf cross-check path deliberately keeps the
+    unrolled Python loop: its callers (the convex experiments and the paper
+    figures) drive it EAGERLY step by step, where an un-jitted scan would
+    re-trace its body on every call — the unrolled ops dispatch faster, and
+    under jit both forms compile to the same per-worker program.
 
     Returns (v, new_state): ``v = beta*v + ghat`` — caller does the prox step.
     """
+    if cfg.bucketed:
+        return _reference_step_bucketed(grads_per_worker, state, key, cfg, beta=beta)
+
     comp = cfg.make()
     n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
 
@@ -356,6 +477,43 @@ def reference_step(
     ghat = jax.tree_util.tree_map(
         lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
     )
+
+    v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
+    return v, new_state._replace(v=v)
+
+
+def _reference_step_bucketed(grads_per_worker, state, key, cfg, *, beta):
+    """:func:`reference_step` on the flat-buffer layout: scan over workers,
+    each round ONE compress on the flattened model; ONE decode_sum over the
+    scan-stacked payload.  Bitwise-equal to the per-leaf reference (same
+    draws, same recurrences) and to the distributed bucketed path."""
+    layout = bucket_layout(cfg, jax.tree_util.tree_map(
+        lambda g: g[0], grads_per_worker
+    ))
+    comp = bucketed_compressor(cfg, layout)
+    dp = layout.padded_size
+    n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
+
+    def worker_round(_, xs):
+        w, g_row, h_row = xs
+        flat_g = layout.flatten(g_row)
+        delta = comp.compress_input(flat_g, h_row)
+        payload = comp.compress(delta, jax.random.fold_in(key, w))
+        dhat_w = comp.decode(payload, dp)
+        return None, (payload, comp.next_memory(h_row, dhat_w, delta))
+
+    _, (stacked, new_h) = jax.lax.scan(
+        worker_round, None,
+        (jnp.arange(n), grads_per_worker, state.h_worker),
+    )
+    dhat_mean = comp.decode_sum(stacked, n, dp) / n
+
+    ghat_flat = comp.server_direction(state.h_server, dhat_mean)
+    new_state = state._replace(
+        h_worker=new_h,
+        h_server=comp.next_server_memory(state.h_server, dhat_mean),
+    )
+    ghat = layout.unflatten(ghat_flat, cast=False)  # f32, like the per-leaf ref
 
     v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
     return v, new_state._replace(v=v)

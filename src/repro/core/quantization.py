@@ -33,8 +33,10 @@ __all__ = [
     "dequantize_pytree",
     "expected_sparsity",
     "quantization_variance",
+    "pad_axis_to_multiple",
     "pad_to_blocks",
     "num_blocks",
+    "quantize_blocks_from_uniform",
 ]
 
 
@@ -100,17 +102,48 @@ def num_blocks(d: int, block_size: int) -> int:
     return -(-d // block_size)
 
 
+def pad_axis_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``.
+
+    The ONE shared block-padding helper (used by :func:`pad_to_blocks` and the
+    kernel wrappers in :mod:`repro.kernels`): implemented with ``concatenate``,
+    not ``jnp.pad``, because the HLO Pad op RET_CHECKs in old XLA's SPMD
+    partitioner inside partial-manual shard_map bodies (DESIGN.md §6) — the
+    aggregation runs inside a shard_map whose worker axes are manual while the
+    inner axes stay auto, and every op on that path must stay partitionable.
+    Zero blocks quantize (and decode) to zero, so the padding is harmless.
+    """
+    n = x.shape[axis]
+    pad = -n % multiple
+    if pad:
+        pad_shape = x.shape[:axis] + (pad,) + x.shape[axis + 1:]
+        x = jnp.concatenate([x, jnp.zeros(pad_shape, x.dtype)], axis=axis)
+    return x
+
+
 def pad_to_blocks(x: jax.Array, block_size: int) -> jax.Array:
     """Flatten and zero-pad ``x`` to a (num_blocks, block_size) matrix."""
-    flat = x.reshape(-1)
-    d = flat.shape[0]
-    m = num_blocks(d, block_size)
-    pad = m * block_size - d
-    if pad:
-        # concatenate, not jnp.pad: the HLO Pad op RET_CHECKs in old XLA's
-        # SPMD partitioner inside partial-manual shard_map bodies
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat.reshape(m, block_size)
+    flat = pad_axis_to_multiple(x.reshape(-1), block_size)
+    return flat.reshape(-1, block_size)
+
+
+def quantize_blocks_from_uniform(
+    blocks: jax.Array, u: jax.Array, *, p: float
+) -> QuantizedBlocks:
+    """Block p-quantization of an (m, B) block matrix given the uniform draws.
+
+    The PRNG-free body of :func:`quantize_blocks`, shared with the bucketed
+    whole-model path (:mod:`repro.core.bucket`), which concatenates per-leaf
+    uniform draws so ONE vectorized call reproduces the per-leaf quantization
+    bitwise.
+    """
+    scales = lp_norm(blocks, p, axis=-1)             # (m,)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    probs = jnp.abs(blocks) / safe[:, None]          # in [0, 1]
+    xi = (u < probs).astype(jnp.int8)
+    signs = jnp.sign(blocks).astype(jnp.int8) * xi
+    scales = jnp.where(scales > 0, scales, 0.0).astype(jnp.float32)
+    return QuantizedBlocks(signs=signs, scales=scales)
 
 
 @partial(jax.jit, static_argnames=("p", "block_size"))
@@ -127,16 +160,9 @@ def quantize_blocks(
     Bernoulli probabilities ``|x_j| / ||x(l)||_p`` are well-defined (<= 1) for
     every ``p >= 1``.
     """
-    d = x.size
     blocks = pad_to_blocks(x, block_size)            # (m, B)
-    scales = lp_norm(blocks, p, axis=-1)             # (m,)
-    safe = jnp.where(scales > 0, scales, 1.0)
-    probs = jnp.abs(blocks) / safe[:, None]          # in [0, 1]
     u = jax.random.uniform(key, blocks.shape, dtype=jnp.float32)
-    xi = (u < probs).astype(jnp.int8)
-    signs = jnp.sign(blocks).astype(jnp.int8) * xi
-    scales = jnp.where(scales > 0, scales, 0.0).astype(jnp.float32)
-    return QuantizedBlocks(signs=signs, scales=scales)
+    return quantize_blocks_from_uniform(blocks, u, p=p)
 
 
 def dequantize_blocks(q: QuantizedBlocks, shape=None, dtype=jnp.float32) -> jax.Array:

@@ -8,7 +8,7 @@ Each kernel has a pure-jnp oracle in :mod:`ref` and is validated in
 """
 
 from . import ops, ref
-from .quantize_pack import quantize_pack
+from .quantize_pack import quantize_pack, quantize_pack_prng
 from .unpack_reduce import unpack_reduce
 
-__all__ = ["ops", "ref", "quantize_pack", "unpack_reduce"]
+__all__ = ["ops", "ref", "quantize_pack", "quantize_pack_prng", "unpack_reduce"]

@@ -12,16 +12,29 @@ The kernel encode draws its Bernoulli bits from an independent PRNG stream,
 so values agree with the pure-jnp path in distribution, not bitwise; the
 kernel *decode* is bitwise-equal to the fallback loop (same f32 accumulate
 recurrence) and tested as such in ``tests/test_compressors.py``.
+
+On compiled TPU backends the encode routes through
+:func:`quantize_pack_prng_op`: the Bernoulli bits are drawn INSIDE the kernel
+(``pltpu.prng_seed`` + ``prng_random_bits`` seeded from the PRNG key's two
+words), so the uint32 bits operand and its 4 bytes/dim of HBM input traffic
+disappear.  Under ``interpret=True`` (CPU CI) the pre-drawn-bits body remains
+the oracle.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from .quantize_pack import quantize_pack
+from .quantize_pack import quantize_pack, quantize_pack_prng
 from .unpack_reduce import unpack_reduce
 
-__all__ = ["default_interpret", "quantize_pack_op", "unpack_reduce_op"]
+__all__ = [
+    "default_interpret",
+    "quantize_pack_op",
+    "quantize_pack_prng_op",
+    "unpack_reduce_op",
+]
 
 
 def default_interpret() -> bool:
@@ -30,6 +43,24 @@ def default_interpret() -> bool:
 
 def quantize_pack_op(delta2d, bits, *, p: float):
     return quantize_pack(delta2d, bits, p=p, interpret=default_interpret())
+
+
+def _key_words(key) -> jax.Array:
+    """A PRNG key's two 32-bit words as an (2,) int32 seed for the in-kernel
+    PRNG (accepts both raw uint32 keys and new-style typed keys)."""
+    try:
+        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+            key = jax.random.key_data(key)
+    except (AttributeError, TypeError):
+        pass
+    words = key.reshape(-1).astype(jnp.uint32)
+    if words.shape[0] < 2:
+        words = jnp.concatenate([words, jnp.zeros((1,), jnp.uint32)])
+    return jax.lax.bitcast_convert_type(words[:2], jnp.int32)
+
+
+def quantize_pack_prng_op(delta2d, key, *, p: float):
+    return quantize_pack_prng(delta2d, _key_words(key), p=p)
 
 
 def unpack_reduce_op(packed, scales):

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.quantization import pad_axis_to_multiple
+
 __all__ = ["unpack_reduce", "DEFAULT_TILE_M"]
 
 DEFAULT_TILE_M = 8
@@ -53,13 +55,9 @@ def unpack_reduce(
 ) -> jax.Array:
     """packed (n, m, B/4) u8, scales (n, m, 1) f32 -> (m, B) f32 sum over n."""
     n, m, b4 = packed.shape
-    mp = -(-m // tile_m) * tile_m
-    if mp != m:
-        # concatenate, not jnp.pad (partial-manual shard_map, see pad_to_blocks)
-        packed = jnp.concatenate(
-            [packed, jnp.zeros((n, mp - m, b4), packed.dtype)], axis=1)
-        scales = jnp.concatenate(
-            [scales, jnp.zeros((n, mp - m, 1), scales.dtype)], axis=1)
+    packed = pad_axis_to_multiple(packed, tile_m, axis=1)
+    scales = pad_axis_to_multiple(scales, tile_m, axis=1)
+    mp = packed.shape[1]
 
     grid = (n, mp // tile_m)
     out = pl.pallas_call(

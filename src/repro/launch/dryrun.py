@@ -162,6 +162,11 @@ def lower_pair(arch: str, shape_name: str, mesh, *, compression: Optional[str] =
         # pod-major when they span pod x data — XLA cannot partition under
         # more than one manual axis; see mesh.resolve_train_mesh).
         smesh, waxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+        from repro.launch.train import resolve_bucketed
+
+        # same bucketed-vs-per-leaf resolution the step/shardings make, so
+        # the eval_shape'd state layout matches what the step expects
+        opt = resolve_bucketed(opt, smesh, waxes)
         n_workers = worker_count(smesh, waxes)
         opt_state_shape = jax.eval_shape(lambda p: opt.init(p, n_workers), params_shape)
         p_shard, o_shard = train_state_shardings(cfg, opt, mesh, params_shape, opt_state_shape)

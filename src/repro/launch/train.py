@@ -51,7 +51,39 @@ from .mesh import (
 )
 from .sharding_rules import batch_specs, param_specs
 
-__all__ = ["build_train_step", "train_state_shardings", "init_train_state", "make_optimizer"]
+__all__ = ["build_train_step", "train_state_shardings", "init_train_state", "make_optimizer",
+           "resolve_bucketed"]
+
+
+def resolve_bucketed(opt: "DianaOptimizer", mesh, waxes) -> "DianaOptimizer":
+    """Downgrade bucketed -> per-leaf aggregation when it cannot lower.
+
+    The flat-buffer round concatenates every (model-sharded) leaf into ONE
+    buffer, which requires resharding under the manual worker subgroup; old
+    XLA's SPMD partitioner RET_CHECKs on those patterns whenever an auto
+    inner axis (size > 1) is live inside the partial-manual body (DESIGN.md
+    §6).  On such toolchains (no nested-manual support) the step silently
+    falls back to the per-leaf layout — bitwise the same results, just more
+    collectives.  Pure worker meshes (the paper's data-parallel setting) and
+    nested-manual-capable toolchains keep the bucketed path.
+
+    Resolved HERE (not inside core.diana) because the choice fixes the
+    DianaState layout: init and step must agree before the state is built.
+    """
+    comp = opt.compression
+    if not comp.bucketed:
+        return opt
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    inner_live = any(sizes[a] > 1 for a in mesh.axis_names if a not in waxes)
+    from repro.compat import supports_nested_manual
+
+    if inner_live and not supports_nested_manual():
+        from dataclasses import replace as _dc_replace
+
+        comp = _dc_replace(comp, bucketed=False)
+        return DianaOptimizer(comp, opt.inner, schedule=opt.schedule,
+                              regularizer=opt.regularizer)
+    return opt
 
 
 def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: float = 0.9,
@@ -63,6 +95,7 @@ def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: floa
         k=cfg.comp_k,
         worker_axes=cfg.comp_worker_axes,
         h_dtype=cfg.h_dtype,
+        bucketed=cfg.comp_bucketed,
     )
     inner_opt = adamw() if inner == "adamw" else momentum(beta)
     return DianaOptimizer(comp, inner_opt, schedule=constant_schedule(lr))
@@ -76,19 +109,40 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
     """NamedSharding pytrees for (params, opt_state) — on the RESOLVED train
     mesh (see mesh.resolve_train_mesh); callers must place batches there too."""
     mesh, waxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    opt = resolve_bucketed(opt, mesh, waxes)
     fsdp = tuple(a for a in data_axes(mesh) if a not in waxes)
     pspecs = param_specs(params_shape, cfg, mesh, fsdp_axes=fsdp)
     p_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
 
     wtuple = waxes if len(waxes) != 1 else waxes[0]
-    h_specs = h_flat_specs(pspecs)
 
-    diana_shard = DianaState(
-        h_worker=jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, P(wtuple if waxes else None, *s)), h_specs
-        ),
-        h_server=jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), h_specs),
-    )
+    if opt.compression.bucketed:
+        # Single flat (n, Dp) / (Dp,) memory buffers: worker dim manual-
+        # sharded; the flat dim shards over 'model' when the padded size
+        # divides evenly (block-aligned layouts usually do), else replicates.
+        # The replicate fallback only matters on nested-manual-capable
+        # toolchains (resolve_bucketed downgrades live-model meshes on old
+        # XLA) — for big align-1 operators there, pad the layout rather than
+        # accept n_workers x Dp replicas; NOT done here because mesh-dependent
+        # padding would fork the state layout across meshes and break the
+        # bitwise per-leaf contract.
+        from repro.core.diana import bucket_layout
+
+        dp = bucket_layout(opt.compression, params_shape).padded_size
+        msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        flat_axis = "model" if msize > 1 and dp % msize == 0 else None
+        diana_shard = DianaState(
+            h_worker=NamedSharding(mesh, P(wtuple if waxes else None, flat_axis)),
+            h_server=NamedSharding(mesh, P(flat_axis)),
+        )
+    else:
+        h_specs = h_flat_specs(pspecs)
+        diana_shard = DianaState(
+            h_worker=jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, P(wtuple if waxes else None, *s)), h_specs
+            ),
+            h_server=jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), h_specs),
+        )
     # inner optimizer state mirrors params (momentum/adam buffers)
     inner_shard = _inner_shardings(opt_state_shape.inner, p_shard, mesh)
     opt_shard = DianaOptState(
@@ -139,8 +193,9 @@ def _inner_shardings(inner_shape, p_shard, mesh):
 
 def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Optional[int] = None):
     """Returns a jitted ``step(params, opt_state, batch, key) -> (params, opt_state, metrics)``."""
+    mesh, waxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    opt = resolve_bucketed(opt, mesh, waxes)
     comp = opt.compression
-    mesh, waxes = resolve_train_mesh(mesh, comp.worker_axes)
     n_workers = worker_count(mesh, waxes)
 
     from repro.compat import supports_nested_manual
@@ -252,6 +307,8 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
 # ---------------------------------------------------------------------------
 
 def init_train_state(cfg, opt: DianaOptimizer, mesh, key):
+    smesh, rwaxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    opt = resolve_bucketed(opt, smesh, rwaxes)
     waxes = worker_axes_in(mesh, opt.compression.worker_axes)
     n_workers = worker_count(mesh, waxes)
 
@@ -281,6 +338,9 @@ def main(argv=None):
                     choices=[None, *available_methods()])
     ap.add_argument("--comp-k", type=int, default=None,
                     help="kept coordinates for rand-k / top-k compressors")
+    ap.add_argument("--per-leaf-agg", action="store_true",
+                    help="disable the bucketed (flat-buffer) aggregation and "
+                         "compress/gather/decode each parameter leaf separately")
     ap.add_argument("--mesh", default=None, help="e.g. 2x2 (data x model) or 2x2x2")
     ap.add_argument("--reduced", action="store_true", help="toy config for CPU runs")
     ap.add_argument("--batch", type=int, default=None, help="override global batch")
@@ -301,6 +361,8 @@ def main(argv=None):
         cfg = dc_replace(cfg, compression=args.compression)
     if args.comp_k:
         cfg = dc_replace(cfg, comp_k=args.comp_k)
+    if args.per_leaf_agg:
+        cfg = dc_replace(cfg, comp_bucketed=False)
     shape = get_shape(args.shape)
     if args.batch or args.seq:
         shape = ShapeConfig(shape.name, args.seq or shape.seq_len,

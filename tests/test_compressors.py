@@ -119,7 +119,9 @@ def test_bits_per_dim_agreement(method):
     pay = comp.compress(jax.random.normal(KEY, (d,)), KEY)
     if method in ("randk", "topk_ef"):
         assert pay.indices.shape == pay.values.shape == (32,)
-        assert comp.bits_per_dim(d) == pytest.approx(64.0 * 32 / d)
+        # d = 640 -> uint16 indices: (32 + 16) bits per kept coordinate
+        assert pay.indices.dtype == jnp.uint16
+        assert comp.bits_per_dim(d) == pytest.approx((32 + 16) * 32 / d)
     if method in ("diana", "qsgd"):
         assert pay.packed.shape == (d // 64, 16)  # 2 bits/dim packed
         assert comp.bits_per_dim(d) == pytest.approx(2.0 + 32.0 / 64)

@@ -1,5 +1,6 @@
 """Pallas kernel validation: shape/dtype/p sweep vs the pure-jnp oracles."""
 
+import functools
 import math
 
 import jax
@@ -7,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import quantize_pack, unpack_reduce
+from repro.kernels import quantize_pack, quantize_pack_prng, unpack_reduce
 from repro.kernels.ref import ref_quantize_pack, ref_unpack_reduce, uniform_from_bits
 
 KEY = jax.random.PRNGKey(0)
@@ -83,6 +84,41 @@ def test_kernel_distribution_is_unbiased():
     samp = np.asarray(jax.jit(jax.vmap(one))(keys))
     err = np.abs(samp.mean(0) - np.asarray(x)).max()
     assert err < 0.15, err
+
+
+def test_quantize_pack_prng_wrapper_shapes():
+    """The in-kernel-PRNG variant is compiled-TPU-only, but its wrapper
+    (padding, grid spec, out shapes) is validated abstractly everywhere."""
+    out = jax.eval_shape(
+        functools.partial(quantize_pack_prng, p=2.0),
+        jax.ShapeDtypeStruct((5, 256), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.int32),
+    )
+    assert out[0].shape == (5, 64) and out[0].dtype == jnp.uint8
+    assert out[1].shape == (5, 1) and out[1].dtype == jnp.float32
+    with pytest.raises(ValueError):
+        jax.eval_shape(
+            functools.partial(quantize_pack_prng, p=2.0),
+            jax.ShapeDtypeStruct((5, 100), jnp.float32),  # not lane-aligned
+            jax.ShapeDtypeStruct((2,), jnp.int32),
+        )
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu", reason="compiled Mosaic only")
+def test_quantize_pack_prng_unbiased_on_tpu():
+    """On a real TPU the in-kernel PRNG must reproduce the operator's
+    statistics: unbiased decode, same wire format as the oracle."""
+    x = jax.random.normal(KEY, (4, 256))
+    n = 2000
+
+    def one(k):
+        from repro.kernels.ops import _key_words
+
+        pk, sc = quantize_pack_prng(x, _key_words(k), p=math.inf)
+        return ref_unpack_reduce(pk[None], sc[None])
+
+    samp = np.asarray(jax.jit(jax.vmap(one))(jax.random.split(jax.random.PRNGKey(5), n)))
+    assert np.abs(samp.mean(0) - np.asarray(x)).max() < 0.2
 
 
 def test_uniform_from_bits_range():

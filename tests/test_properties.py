@@ -105,6 +105,34 @@ def test_sparsity_increasing_in_p(seed):
     assert si >= s2 - 1e-4
 
 
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=8),
+       st.sampled_from([1, 4, 16, 64]),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_bucket_layout_roundtrip(sizes, align, seed):
+    """BucketLayout flatten/unflatten is the identity on arbitrary pytrees:
+    offsets are aligned and disjoint, pads are zero, values survive exactly."""
+    from repro.core import BucketLayout
+
+    key = jax.random.PRNGKey(seed)
+    tree = {f"leaf{i}": jax.random.normal(jax.random.fold_in(key, i), (s,))
+            for i, s in enumerate(sizes)}
+    lay = BucketLayout.for_tree(tree, align=align)
+    flat = lay.flatten(tree)
+    assert flat.shape == (lay.padded_size,) and lay.padded_size % align == 0
+    assert lay.size == sum(sizes)
+    back = lay.unflatten(flat)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    flat_np = np.asarray(flat)
+    covered = np.zeros(lay.padded_size, bool)
+    for off, size, ps in zip(lay.offsets, lay.sizes, lay.padded_sizes):
+        assert off % align == 0 and not covered[off:off + ps].any()
+        covered[off:off + ps] = True
+        assert np.all(flat_np[off + size:off + ps] == 0.0)
+    assert covered.all()
+
+
 @given(st.sampled_from(["diana", "qsgd", "terngrad", "dqgd", "none"]),
        st.integers(0, 1000))
 @settings(max_examples=30, deadline=None)
