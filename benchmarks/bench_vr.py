@@ -1,0 +1,74 @@
+"""Stochastic-regime comparison (arXiv:1904.05115, Fig. 1 analogue):
+VR-DIANA's L-SVRG control variates restore LINEAR convergence to the exact
+optimum with single-sample gradients, while plain DIANA and memoryless QSGD
+stall at their variance floors.
+
+Paper claims validated:
+  * VR-DIANA's final gap is orders of magnitude below DIANA's at an equal
+    step budget (>= 10x asserted as a CLAIM row, mirrored as a tier-1 test
+    in tests/test_convergence_laws.py);
+  * DIANA's stochastic gap is a FLOOR: it stops improving between half and
+    full budget, where VR-DIANA keeps contracting.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .common import fstar_logreg, run_logreg_stochastic, stoch_problem
+
+STEPS = 600
+GAMMA = 0.5
+BLOCK = 8
+GAP_FLOOR = 1e-7
+
+
+def _gap_at(losses, step, fstar):
+    """Objective gap at the recorded step nearest to ``step``."""
+    t, loss = min(losses, key=lambda tl: abs(tl[0] - step))
+    return max(loss - fstar, GAP_FLOOR)
+
+
+def run():
+    prob = stoch_problem()
+    fstar = fstar_logreg(prob, 400)
+
+    settings = [
+        ("vr_diana_linf", "diana", math.inf, True),
+        ("diana_linf", "diana", math.inf, False),
+        ("qsgd_l2", "qsgd", 2.0, False),
+    ]
+    rows, gaps, half_gaps = [], {}, {}
+    for name, method, p, vr in settings:
+        res = run_logreg_stochastic(method, p, steps=STEPS, gamma=GAMMA,
+                                    block=BLOCK, vr=vr, problem=prob)
+        gaps[name] = _gap_at(res["losses"], STEPS, fstar)
+        half_gaps[name] = _gap_at(res["losses"], STEPS // 2, fstar)
+        rows.append({
+            "name": f"vr_stochastic/{name}",
+            "us_per_call": round(res["us_per_step"], 1),
+            "derived": f"gap={gaps[name]:.3e};gap_half={half_gaps[name]:.3e}",
+        })
+
+    rows.append({
+        "name": "vr_stochastic/CLAIM_vr_beats_diana_floor_10x",
+        "us_per_call": 0.0,
+        "derived": str(gaps["diana_linf"] >= 10.0 * gaps["vr_diana_linf"]),
+    })
+    rows.append({
+        "name": "vr_stochastic/CLAIM_diana_gap_is_a_floor",
+        "us_per_call": 0.0,
+        # no order-of-magnitude progress in the second half of the budget
+        "derived": str(gaps["diana_linf"] > 0.1 * half_gaps["diana_linf"]),
+    })
+    rows.append({
+        "name": "vr_stochastic/CLAIM_qsgd_stalls_above",
+        "us_per_call": 0.0,
+        "derived": str(gaps["qsgd_l2"] >= 10.0 * gaps["vr_diana_linf"]),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

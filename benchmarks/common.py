@@ -8,15 +8,16 @@ everything into the required ``name,us_per_call,derived`` CSV.
 
 from __future__ import annotations
 
+import functools
 import math
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CompressionConfig, reference_init, reference_step
+from repro.core import CompressionConfig, reference_init, reference_step, resolve_vr_p
 
 
 def timed(fn: Callable, *args, reps: int = 3) -> float:
@@ -78,7 +79,130 @@ def run_logreg(method: str, p: float, *, steps: int, gamma: float, block: int,
             "us_per_step": wall, "cfg": cfg}
 
 
+@functools.lru_cache(maxsize=None)
 def fstar_logreg(problem=None, steps: int = 4000, l1: float = 0.0):
-    """High-accuracy reference optimum via uncompressed full-gradient descent."""
+    """High-accuracy reference optimum via uncompressed full-gradient descent.
+
+    Cached per ``(problem, steps, l1)`` (``LogRegProblem`` is frozen, hence
+    hashable): every benchmark module used to re-derive f* on each ``run()``,
+    so a full ``benchmarks.run`` sweep paid the 4000-step solve several times
+    over — now it is solved once per problem and shared across
+    bench_convergence / bench_norm_power / bench_blocksize / bench_vr and the
+    convergence-law tests.
+    """
     res = run_logreg("none", 2.0, steps=steps, gamma=2.0, block=64, l1=l1, problem=problem)
     return res["final_loss"]
+
+
+# ---------------------------------------------------------------------------
+# Stochastic finite-sum regime (VR-DIANA vs DIANA/QSGD — arXiv:1904.05115)
+# ---------------------------------------------------------------------------
+
+def stoch_problem(dim: int = 24, n_workers: int = 4, m_per_worker: int = 32,
+                  l2: float = 0.1, seed: int = 3):
+    """The seeded strongly-convex fixture of the stochastic-regime runs: small
+    enough that a few hundred eager reference steps finish in seconds, convex
+    enough (l2 ~ L/3) that the rate laws separate cleanly."""
+    from repro.configs.diana_paper import LogRegProblem
+
+    return LogRegProblem(name=f"stoch-{dim}d", n_samples=n_workers * m_per_worker,
+                         dim=dim, n_workers=n_workers, l2=l2, seed=seed)
+
+
+_SAMPLE_FOLD = 0x534A  # 'SJ': the per-step minibatch draw, distinct from every
+                       # compression / VR fold so schedules never collide
+
+
+def run_logreg_stochastic(method: str, p: float = math.inf, *, steps: int,
+                          gamma: float, block: int = 8, batch: int = 1,
+                          vr: bool = False, vr_p: Optional[float] = None,
+                          alpha=None, k: int = 8, beta: float = 0.0,
+                          seed: int = 0, problem=None, record_every: int = 25):
+    """Single-sample (finite-sum) stochastic logistic regression through the
+    reference DIANA/VR-DIANA aggregation.
+
+    Every worker holds ``m`` samples; each step it samples a size-``batch``
+    minibatch (shared draw schedule across methods: comparisons at equal
+    step budget see the same data order) and feeds its stochastic gradient —
+    control-variated against the L-SVRG (snapshot, mu) state when
+    ``vr=True`` — through :func:`repro.core.diana.reference_step`.  VR runs
+    exact L-SVRG semantics: ``mu^0`` is the true local full gradient at
+    ``x^0`` and every refresh recomputes it at the current iterate
+    (``O(m d)`` — trivial at fixture scale).  ``vr_p=None`` resolves to the
+    paper's ``1/m``.
+
+    Returns losses trajectory, final full loss, per-step wall time and cfg.
+    """
+    from repro.data import logreg_data
+
+    prob = problem or stoch_problem()
+    X, y = logreg_data(prob)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    w_, m, d = X.shape
+    l2 = prob.l2
+
+    cfg = CompressionConfig(
+        method=method, p=p, block_size=block, alpha=alpha, k=k,
+        vr=vr, vr_p=resolve_vr_p(vr_p, m) if vr else None,
+    )
+
+    def full_grads(xmat):
+        """Per-worker full local gradients at per-worker points (w, d)."""
+        z = y * jnp.einsum("wij,wj->wi", X, xmat)
+        sig = jax.nn.sigmoid(-z)
+        return -jnp.einsum("wij,wi->wj", X, y * sig) / m + l2 * xmat
+
+    def sampled_grads(xmat, idx):
+        """Per-worker minibatch gradients at per-worker points.
+
+        xmat (w, d); idx (w, batch) sample indices into each worker's shard.
+        """
+        Xb = jnp.take_along_axis(X, idx[..., None], axis=1)      # (w, b, d)
+        yb = jnp.take_along_axis(y, idx, axis=1)                 # (w, b)
+        z = yb * jnp.einsum("wbj,wj->wb", Xb, xmat)
+        sig = jax.nn.sigmoid(-z)
+        return -jnp.einsum("wbj,wb->wj", Xb, yb * sig) / idx.shape[1] + l2 * xmat
+
+    def full_loss(xv):
+        z = y * jnp.einsum("wij,j->wi", X, xv)
+        return float(jnp.mean(jnp.log1p(jnp.exp(-z))) + 0.5 * l2 * xv @ xv)
+
+    params = {"x": jnp.zeros((d,))}
+    state = reference_init(params, cfg, w_)
+    if vr:
+        x0 = jnp.broadcast_to(params["x"], (w_, d))
+        state = state._replace(vr=state.vr._replace(mu={"x": full_grads(x0)}))
+
+    # One jitted step: unlike the eager convex experiments (one reference_step
+    # per paper figure point), the stochastic regime runs hundreds of tiny
+    # steps — dispatch overhead would dominate, and the compiled program is
+    # identical math (reference_step's unrolled loops trace once).
+    @jax.jit
+    def step(params, state, kt):
+        idx = jax.random.randint(
+            jax.random.fold_in(kt, _SAMPLE_FOLD), (w_, batch), 0, m)
+        xb = jnp.broadcast_to(params["x"], (w_, d))
+        g = {"x": sampled_grads(xb, idx)}
+        if vr:
+            g_snap = {"x": sampled_grads(state.vr.snapshot["x"], idx)}
+            mu_cand = {"x": full_grads(xb)}
+            v, state = reference_step(g, state, kt, cfg, beta=beta,
+                                      vr_aux=(g_snap, mu_cand), params=params)
+        else:
+            v, state = reference_step(g, state, kt, cfg, beta=beta)
+        return {"x": params["x"] - gamma * v["x"]}, state
+
+    key = jax.random.PRNGKey(seed)
+    # warm-up: compile outside the timed region (step is pure; the discarded
+    # call does not advance the trajectory), so us_per_step is step time, not
+    # amortized XLA compile time
+    jax.block_until_ready(step(params, state, jax.random.fold_in(key, 0)))
+    losses = []
+    t0 = time.perf_counter()
+    for t in range(steps):
+        params, state = step(params, state, jax.random.fold_in(key, t))
+        if t % record_every == 0 or t == steps - 1:
+            losses.append((t, full_loss(params["x"])))
+    wall = (time.perf_counter() - t0) / steps * 1e6
+    return {"losses": losses, "final_loss": losses[-1][1], "x": params["x"],
+            "us_per_step": wall, "cfg": cfg}

@@ -11,6 +11,7 @@ Prints the required ``name,us_per_call,derived`` CSV.  Modules:
   bench_variance        Lem. 2            quantization variance + kernel time
   bench_rosenbrock      Sec. M.1          nonconvex toy comparison
   bench_decreasing_step Thm. 3 / Cor. 2   O(1/k) with noise
+  bench_vr              1904.05115 Thm3.1 VR-DIANA linear vs stochastic floors
   bench_step_time       ISSUE 2           bucketed vs per-leaf step time
   roofline              deliverable (g)   3-term roofline from dry-run artifacts
 
@@ -34,6 +35,7 @@ MODULES = [
     "bench_variance",
     "bench_rosenbrock",
     "bench_decreasing_step",
+    "bench_vr",
     "bench_step_time",
     "roofline",
 ]

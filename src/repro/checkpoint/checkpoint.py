@@ -2,8 +2,11 @@
 
 Handles bf16 leaves via ml_dtypes (a JAX dependency), preserves tree structure
 through key-path flattening, and round-trips DianaOptState / model params /
-caches alike.  Writes are atomic (tmp + rename) — a crashed save never
-corrupts the previous checkpoint.
+caches alike — including the optional VR-DIANA slot (`DianaState.vr`): when
+present its (snapshot, mu) leaves flatten under `.../vr/...` key paths like
+any other state, and when it is None the NamedTuple child flattens away, so
+VR-off checkpoints carry no dead keys.  Writes are atomic (tmp + rename) — a
+crashed save never corrupts the previous checkpoint.
 """
 
 from __future__ import annotations
@@ -89,7 +92,12 @@ def restore_checkpoint(directory: str, template, step: int | None = None):
     for kpath, leaf in flat:
         key = "/".join(_path_str(p) for p in kpath)
         if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
+            hint = ""
+            if "/vr/" in f"/{key}/":
+                hint = (" — the checkpoint was saved without a VR slot "
+                        "(vr=False); restore into a matching template or "
+                        "re-init the VR state after restoring the rest")
+            raise KeyError(f"checkpoint missing leaf {key!r}{hint}")
         arr = data[key]
         saved_dtype = dtypes.get(key, str(arr.dtype))
         if saved_dtype in _EXOTIC:

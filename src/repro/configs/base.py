@@ -97,6 +97,10 @@ class ModelConfig:
     comp_bucketed: bool = True     # whole-model flat-buffer aggregation (one
                                    # compress / gather / decode per step,
                                    # repro.core.bucket); False = per-leaf
+    vr: bool = False               # VR-DIANA: L-SVRG control variates under
+                                   # the compressed-difference loop (core.vr)
+    vr_p: Optional[float] = None   # snapshot-refresh probability; None = the
+                                   # paper's 1/m (resolved by launch/train.py)
     h_dtype: Any = jnp.float32
 
     @property

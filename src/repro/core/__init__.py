@@ -20,6 +20,15 @@ from .compressors import (
     make_compressor,
 )
 from .bucket import BucketLayout, BucketedCompressor, bucketed_compressor
+from .vr import (
+    VarianceReducer,
+    VRState,
+    control_variate,
+    init_vr,
+    refresh,
+    resolve_vr_p,
+    vr_coin,
+)
 from .diana import (
     DianaState,
     init_state,
@@ -38,6 +47,8 @@ __all__ = [
     "CompressionConfig", "compress_tree", "decompress_tree", "payload_bits_per_dim",
     "Compressor", "Payload", "available_methods", "make_compressor",
     "BucketLayout", "BucketedCompressor", "bucketed_compressor", "bucket_layout",
+    "VarianceReducer", "VRState", "control_variate", "init_vr", "refresh",
+    "resolve_vr_p", "vr_coin",
     "DianaState", "init_state", "aggregate_shardmap", "reference_init", "reference_step",
     "tree_zeros_like", "prox",
 ]

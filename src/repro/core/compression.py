@@ -63,6 +63,14 @@ class CompressionConfig:
                  one all-gather, one decode_sum per step — repro.core.bucket)
                  instead of per-leaf.  Bitwise-equal results either way; the
                  flag only selects the execution layout.
+    vr:          VR-DIANA (arXiv:1904.05115): layer a per-worker L-SVRG
+                 control variate under the compressed-difference loop
+                 (repro.core.vr).  Orthogonal to the operator and the layout
+                 — every registry compressor composes with it unchanged.
+    vr_p:        L-SVRG snapshot-refresh probability.  None = the paper's
+                 ``1/m`` default, resolved by the caller who knows the local
+                 finite-sum size (repro.core.vr.resolve_vr_p); must be
+                 concrete by aggregation time.
     """
 
     method: str = "diana"
@@ -74,11 +82,15 @@ class CompressionConfig:
     worker_axes: tuple = ("pod", "data")
     use_kernel: Optional[bool] = None
     bucketed: bool = False
+    vr: bool = False
+    vr_p: Optional[float] = None
 
     def __post_init__(self):
         canonical_name(self.method)  # raises on unknown methods
         if self.block_size % 4:
             raise ValueError("block_size must be a multiple of 4 for 2-bit packing")
+        if self.vr_p is not None and not 0.0 < self.vr_p <= 1.0:
+            raise ValueError(f"vr_p must be in (0, 1], got {self.vr_p}")
 
     # ------------------------------------------------------------- factory
 

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from .bucket import BucketLayout, bucketed_compressor, fuse_payload, payload_recipe, unfuse_payload
 from .compression import CompressionConfig
 from .compressors import Compressor, Payload
+from .vr import VRState, control_variate, init_vr, reference_coins, refresh, vr_coin
 
 __all__ = [
     "DianaState",
@@ -78,10 +79,18 @@ class DianaState(NamedTuple):
     error-feedback residual e_i for top-k EF, inert zeros for memoryless
     ones.  h_server is replicated over worker axes — the paper's server-side
     ``h^k = mean_i h_i^k``.
+
+    vr is the optional VR-DIANA slot (:class:`~repro.core.vr.VRState`,
+    ``cfg.vr``): per-worker L-SVRG (snapshot, mu) pairs, stored in PARAMETER
+    layout (leaves ``(n_workers, *shape)``, worker dim sharded like
+    h_worker) regardless of ``cfg.bucketed`` — VR algebra runs before any
+    flattening.  ``None`` flattens away, so pre-VR code, checkpoints and
+    shardings are untouched when VR is off.
     """
 
     h_worker: Any
     h_server: Any
+    vr: Any = None
 
 
 def bucket_layout(cfg: CompressionConfig, tree) -> BucketLayout:
@@ -91,18 +100,22 @@ def bucket_layout(cfg: CompressionConfig, tree) -> BucketLayout:
 
 
 def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
-    """h_i^0 = 0 (the paper's experimental choice) for all operators."""
+    """h_i^0 = 0 (the paper's experimental choice) for all operators; the VR
+    slot (``cfg.vr``) starts at ``w_i^0 = x^0`` with zero ``mu`` (see
+    :func:`repro.core.vr.init_vr` for how callers warm-start ``mu``)."""
+    vr = init_vr(params, n_workers) if cfg.vr else None
     if cfg.bucketed:
         dp = bucket_layout(cfg, params).padded_size
         return DianaState(
             h_worker=jnp.zeros((n_workers, dp), cfg.h_dtype),
             h_server=jnp.zeros((dp,), cfg.h_dtype),
+            vr=vr,
         )
     h_w = jax.tree_util.tree_map(
         lambda p: jnp.zeros((n_workers, p.size), cfg.h_dtype), params
     )
     h_s = jax.tree_util.tree_map(lambda p: jnp.zeros((p.size,), cfg.h_dtype), params)
-    return DianaState(h_worker=h_w, h_server=h_s)
+    return DianaState(h_worker=h_w, h_server=h_s, vr=vr)
 
 
 # ---------------------------------------------------------------------------
@@ -279,12 +292,34 @@ def aggregate_shardmap(
     grad_specs=None,
     h_specs=None,
     mesh=None,
+    vr_aux=None,
+    params_local=None,
+    vr_force_refresh=None,
 ):
     """One DIANA aggregation round inside a shard_map body.
 
     grads_local — this worker's local gradient pytree (g_i^k).
     state.h_worker leaves arrive with local leading dim 1 (own memory only).
     key          — already folded with the worker index (deterministic stream).
+
+    With ``state.vr`` present (``cfg.vr``) the round is VR-DIANA
+    (repro.core.vr): the compressor consumes the control-variated estimator
+    ``k_i = g_i - grad f_{ij}(w_i) + mu_i`` instead of ``g_i``, and the
+    (snapshot, mu) pair refreshes with the worker's Bernoulli(``cfg.vr_p``)
+    coin drawn from ``fold_in(key, VR_FOLD)``.  Callers must then supply
+
+    * ``vr_aux = (grads_at_snapshot, mu_candidate)`` — this worker's
+      gradient at its snapshot ``w_i`` on the SAME minibatch, and the value
+      ``mu_i`` takes on refresh (the full local gradient at ``x^k`` in the
+      finite-sum setting; the minibatch gradient in the streaming trainer);
+      both parameter-shaped local trees (no leading worker dim);
+    * ``params_local`` — the current iterate ``x^k`` (the refreshed snapshot);
+    * optionally ``vr_force_refresh`` — a traced bool OR-ed into the coin
+      (the trainer forces a refresh at step 0 to populate a zeros-init mu).
+
+    The VR algebra runs on parameter-shaped trees BEFORE any layout
+    decision, so it composes with every operator in both the per-leaf and
+    bucketed layouts, and ``ghat`` is cast back to the gradients' dtypes.
 
     With ``cfg.bucketed`` the round runs on the whole-model flat buffer
     (:func:`_aggregate_bucketed`: one compress, one fused all-gather, one
@@ -309,6 +344,48 @@ def aggregate_shardmap(
     axis_names = tuple(axis_names)
     inner_axes = tuple(inner_axes)
 
+    grads_in = grads_local
+    new_vr = state.vr
+    if state.vr is not None:
+        assert cfg.vr_p is not None, (
+            "VR aggregation needs a concrete snapshot probability — resolve "
+            "cfg.vr_p (repro.core.vr.resolve_vr_p) before building the step")
+        assert vr_aux is not None and params_local is not None, (
+            "VR aggregation needs vr_aux=(grads_at_snapshot, mu_candidate) "
+            "and params_local")
+        g_snap, mu_cand = vr_aux
+        mu_own = jax.tree_util.tree_map(
+            lambda m: m[0].astype(jnp.float32), state.vr.mu
+        )
+        grads_in = control_variate(grads_local, g_snap, mu_own)
+        coins = vr_coin(key, cfg.vr_p)[None]
+        if vr_force_refresh is not None:
+            coins = coins | jnp.asarray(vr_force_refresh, bool)
+        new_vr = refresh(
+            state.vr, coins, params_local,
+            jax.tree_util.tree_map(lambda g: g[None], mu_cand),
+        )
+
+    ghat, new_hw, new_hs = _dispatch_round(
+        grads_in, state, key, cfg,
+        axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
+        grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
+    )
+    if state.vr is not None:
+        # VR algebra ran in f32; restore the caller's gradient dtypes so the
+        # optimizer state layout is independent of the vr flag.
+        ghat = jax.tree_util.tree_map(
+            lambda f, g: f.astype(g.dtype), ghat, grads_local
+        )
+    return ghat, DianaState(h_worker=new_hw, h_server=new_hs, vr=new_vr)
+
+
+def _dispatch_round(
+    grads_local, state, key, cfg, *,
+    axis_names, n_workers, inner_axes, grad_specs, h_specs, mesh,
+):
+    """Route one (possibly control-variated) gradient tree through the
+    layout-appropriate Algorithm-1 round; returns ``(ghat, new_hw, new_hs)``."""
     comp = cfg.make()
     if comp.prefers_allreduce:
         # dense stateless payload: the gathered mean IS a fused all-reduce
@@ -316,7 +393,7 @@ def aggregate_shardmap(
             lambda g: jax.lax.pmean(g, axis_names) if axis_names else g,
             grads_local,
         )
-        return ghat, state
+        return ghat, state.h_worker, state.h_server
 
     if cfg.bucketed:
         # The flat buffer is ONE global object, so the bucketed round always
@@ -325,19 +402,17 @@ def aggregate_shardmap(
         # nested fully-manual mode (whose point is per-leaf shard-local
         # encode/decode) does not apply — a shard-local sub-layout is future
         # work, tracked in DESIGN.md §Perf.
-        ghat, new_hw, new_hs = _aggregate_bucketed(
+        return _aggregate_bucketed(
             grads_local, state.h_worker, state.h_server, key, cfg,
             axis_names, n_workers,
         )
-        return ghat, DianaState(h_worker=new_hw, h_server=new_hs)
 
     if not inner_axes or grad_specs is None:
         # single-device / tests: everything already local
-        ghat, new_hw, new_hs = _aggregate_local(
+        return _aggregate_local(
             grads_local, state.h_worker, state.h_server, key, cfg,
             axis_names, n_workers,
         )
-        return ghat, DianaState(h_worker=new_hw, h_server=new_hs)
 
     from jax.sharding import PartitionSpec as P
 
@@ -360,11 +435,10 @@ def aggregate_shardmap(
     hw_specs = jax.tree_util.tree_map(lambda s: P(None, *s), h_specs)
     in_specs = (grad_specs, hw_specs, h_specs, P())
     out_specs = (grad_specs, hw_specs, h_specs)
-    ghat, new_hw, new_hs = _shard_map(
+    return _shard_map(
         body, mesh=amesh, in_specs=in_specs, out_specs=out_specs,
         axis_names=set(inner_axes), check_vma=False,
     )(grads_local, state.h_worker, state.h_server, key)
-    return ghat, DianaState(h_worker=new_hw, h_server=new_hs)
 
 
 # ---------------------------------------------------------------------------
@@ -376,15 +450,18 @@ class ReferenceState(NamedTuple):
                    # (n, Dp) buffer in bucketed mode)
     h_server: Any  # (d,) per leaf — flat (or (Dp,) bucketed)
     v: Any         # momentum buffer, like params
+    vr: Any = None # optional VR-DIANA slot, mirroring DianaState.vr
 
 
 def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceState:
+    vr = init_vr(params, n_workers) if cfg.vr else None
     if cfg.bucketed:
         dp = bucket_layout(cfg, params).padded_size
         return ReferenceState(
             h_worker=jnp.zeros((n_workers, dp), jnp.float32),
             h_server=jnp.zeros((dp,), jnp.float32),
             v=tree_zeros_like(params, jnp.float32),
+            vr=vr,
         )
     return ReferenceState(
         h_worker=jax.tree_util.tree_map(
@@ -394,6 +471,7 @@ def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceS
             lambda p: jnp.zeros((p.size,), jnp.float32), params
         ),
         v=tree_zeros_like(params, jnp.float32),
+        vr=vr,
     )
 
 
@@ -404,6 +482,9 @@ def reference_step(
     cfg: CompressionConfig,
     *,
     beta: float = 0.0,
+    vr_aux=None,
+    params=None,
+    vr_force_refresh=None,
 ):
     """Aggregate stacked per-worker grads (n, ...) exactly as Algorithm 1.
 
@@ -414,6 +495,15 @@ def reference_step(
     distributed decode — tests assert exact equality between the two, and
     between the two layouts.
 
+    With ``state.vr`` present (``cfg.vr``) this is VR-DIANA: the stacked
+    gradients are control-variated against the per-worker (snapshot, mu)
+    state before compression, and the snapshots refresh on per-worker
+    Bernoulli(``cfg.vr_p``) coins — the SAME draws and where-selects as the
+    distributed path (repro.core.vr's PRNG schedule contract), so bitwise
+    equality extends to VR runs.  ``vr_aux = (grads_at_snapshot,
+    mu_candidate)`` stacks the distributed per-worker aux trees
+    (``(n, *shape)`` leaves) and ``params`` is the current iterate.
+
     The bucketed path scans over workers (``lax.scan``: one traced body
     regardless of n).  The per-leaf cross-check path deliberately keeps the
     unrolled Python loop: its callers (the convex experiments and the paper
@@ -423,8 +513,26 @@ def reference_step(
 
     Returns (v, new_state): ``v = beta*v + ghat`` — caller does the prox step.
     """
+    new_vr = state.vr
+    if state.vr is not None:
+        assert cfg.vr_p is not None, (
+            "VR reference step needs a concrete cfg.vr_p "
+            "(repro.core.vr.resolve_vr_p)")
+        assert vr_aux is not None and params is not None, (
+            "VR reference step needs vr_aux=(grads_at_snapshot, mu_candidate) "
+            "and params")
+        g_snap, mu_cand = vr_aux
+        grads_per_worker = control_variate(grads_per_worker, g_snap, state.vr.mu)
+        nw = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
+        coins = reference_coins(key, cfg.vr_p, nw)
+        if vr_force_refresh is not None:
+            coins = coins | jnp.asarray(vr_force_refresh, bool)
+        new_vr = refresh(state.vr, coins, params, mu_cand)
+
     if cfg.bucketed:
-        return _reference_step_bucketed(grads_per_worker, state, key, cfg, beta=beta)
+        v, new_state = _reference_step_bucketed(
+            grads_per_worker, state, key, cfg, beta=beta)
+        return v, new_state._replace(vr=new_vr)
 
     comp = cfg.make()
     n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
@@ -479,7 +587,7 @@ def reference_step(
     )
 
     v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
-    return v, new_state._replace(v=v)
+    return v, new_state._replace(v=v, vr=new_vr)
 
 
 def _reference_step_bucketed(grads_per_worker, state, key, cfg, *, beta):

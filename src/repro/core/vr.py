@@ -1,0 +1,190 @@
+"""VR-DIANA variance reduction — L-SVRG control variates under compression.
+
+DIANA removes the *compression* noise of the gradient differences, but with
+stochastic finite-sum gradients the iterates still stall at a variance ball
+set by the *sampling* noise (Thm 2's sigma term).  Horváth et al.,
+"Stochastic Distributed Learning with Gradient Quantization and Variance
+Reduction" (arXiv:1904.05115), close that gap: each worker layers an
+L-SVRG control variate under the same compressed-difference mechanism,
+
+    k_i^t = g_i^t - grad f_{ij_t}(w_i^t) + mu_i^t,
+    mu_i^t = (1/m) sum_j grad f_{ij}(w_i^t),
+
+and feeds ``k_i`` (instead of the raw stochastic gradient ``g_i``) into
+DIANA's compressor input ``k_i - h_i``.  The snapshot ``w_i`` refreshes
+probabilistically (loopless SVRG): with probability ``p`` — paper default
+``p = 1/m`` — worker ``i`` sets ``w_i <- x^t`` and recomputes ``mu_i``.
+The resulting estimator is unbiased (``E_j[k_i] = grad f_i(x)``) and its
+variance vanishes as ``x, w_i -> x*``, giving LINEAR convergence to the
+exact optimum with stochastic gradients (their Thm 3.1), where plain
+DIANA/QSGD stall at the variance floor.
+
+This module owns the *state and algebra* only — what the control-variated
+gradient is, and how the (snapshot, mu) pair refreshes.  It is deliberately
+oblivious to the loss: callers supply the gradients at the snapshot and the
+refresh candidate for ``mu`` (a full local gradient in the finite-sum
+setting; the freshest minibatch gradient in the streaming trainer — see
+DESIGN.md §VR).  The aggregation plumbing lives in :mod:`repro.core.diana`,
+which applies :func:`control_variate` BEFORE any layout decision, so VR
+composes unchanged with every registry compressor in both the per-leaf and
+bucketed layouts.
+
+PRNG schedule contract: the Bernoulli coin of worker ``i`` at a step keyed
+``key`` is ``bernoulli(fold_in(fold_in(key, i), VR_FOLD), p)``.  The
+distributed path receives the already worker-folded key and folds
+``VR_FOLD``; the reference path folds the worker index itself — both draw
+the identical coin, which is what keeps ``aggregate_shardmap`` and
+``reference_step`` bitwise-equal under VR (tests/test_convergence_laws.py).
+``VR_FOLD`` is distinct from any compression fold, so enabling VR never
+perturbs the compressor's draws.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "VRState",
+    "VR_FOLD",
+    "VarianceReducer",
+    "init_vr",
+    "control_variate",
+    "vr_coin",
+    "reference_coins",
+    "refresh",
+    "resolve_vr_p",
+]
+
+# Folded into the (worker-folded) step key for the snapshot coin; distinct
+# from the compressor key schedule (which only ever splits / folds leaf and
+# worker indices), so the coin stream never collides with compression draws.
+VR_FOLD = 0x5652  # 'VR'
+
+
+class VRState(NamedTuple):
+    """Per-worker L-SVRG state carried inside :class:`~repro.core.diana.DianaState`.
+
+    Both fields keep the PARAMETER layout (leaves ``(n_local, *shape)``) in
+    every aggregation layout — VR algebra runs on parameter-shaped gradient
+    trees *before* the per-leaf/bucketed flattening, so the slot is
+    layout-independent (and checkpoints round-trip it like any other pytree).
+
+    snapshot: the worker's snapshot point ``w_i`` — a per-worker copy of the
+              params (param dtype, so a second grad pass can run on it).
+    mu:       the control variate ``mu_i = (1/m) sum_j grad f_{ij}(w_i)``
+              (f32, like every gradient accumulator in the repo).
+    """
+
+    snapshot: Any
+    mu: Any
+
+
+def init_vr(params, n_workers: int, mu=None) -> VRState:
+    """``w_i^0 = x^0`` for every worker; ``mu`` defaults to zeros.
+
+    Exact L-SVRG semantics need ``mu_i^0 = grad f_i(w_i^0)`` — the convex
+    harness (benchmarks/common.py) computes it and installs it via
+    ``state._replace``; the streaming trainer instead forces a refresh on
+    step 0 (``vr_force_refresh`` in :func:`repro.core.diana.aggregate_shardmap`),
+    after which the state is self-consistent.
+    """
+    snapshot = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n_workers,) + p.shape), params
+    )
+    if mu is None:
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n_workers,) + p.shape, jnp.float32), params
+        )
+    return VRState(snapshot=snapshot, mu=mu)
+
+
+def control_variate(g, g_snapshot, mu):
+    """The L-SVRG estimator ``k = g - grad f_j(w) + mu``, elementwise in f32.
+
+    All three trees share the gradient (= parameter) shapes; the result is
+    f32 regardless of input dtypes — it feeds the compressor input, which
+    always upcasts, so doing the algebra in f32 keeps the reference and
+    distributed paths bit-identical.
+    """
+    return jax.tree_util.tree_map(
+        lambda a, b, c: a.astype(jnp.float32) - b.astype(jnp.float32)
+        + c.astype(jnp.float32),
+        g, g_snapshot, mu,
+    )
+
+
+def vr_coin(worker_key: jax.Array, p: float) -> jax.Array:
+    """This worker's Bernoulli(p) snapshot coin (``worker_key`` is already
+    folded with the worker index — the distributed convention)."""
+    return jax.random.bernoulli(jax.random.fold_in(worker_key, VR_FOLD), p)
+
+
+def reference_coins(key: jax.Array, p: float, n_workers: int) -> jax.Array:
+    """All workers' coins ``(n,)`` from the un-folded step key — the exact
+    per-worker draws :func:`vr_coin` produces on the distributed path."""
+    return jnp.stack([
+        vr_coin(jax.random.fold_in(key, w), p) for w in range(n_workers)
+    ])
+
+
+def refresh(vr: VRState, coins: jax.Array, params, mu_candidate) -> VRState:
+    """L-SVRG snapshot step: rows where ``coins`` is set take
+    ``w_i <- params`` and ``mu_i <- mu_candidate_i``; others keep their state.
+
+    ``coins`` is ``(n_local,)`` bool; ``params`` leaves are parameter-shaped
+    (broadcast over the worker rows); ``mu_candidate`` leaves carry the
+    worker dim ``(n_local, *shape)``.  A pure where-select, so the reference
+    (n rows at once) and distributed (one local row) paths produce identical
+    rows per worker.
+    """
+
+    def sel(new, old):
+        c = coins.reshape(coins.shape + (1,) * (old.ndim - 1))
+        return jnp.where(c, new.astype(old.dtype), old)
+
+    snapshot = jax.tree_util.tree_map(
+        lambda s, x: sel(jnp.broadcast_to(x[None], s.shape), s),
+        vr.snapshot, params,
+    )
+    mu = jax.tree_util.tree_map(
+        lambda m, g: sel(g.astype(jnp.float32), m), vr.mu, mu_candidate
+    )
+    return VRState(snapshot=snapshot, mu=mu)
+
+
+def resolve_vr_p(vr_p: Optional[float], m: int) -> float:
+    """The snapshot probability: an explicit override, else the paper's
+    ``p = 1/m`` (``m`` = local finite-sum size; the trainer substitutes its
+    per-worker batch size for the streaming case)."""
+    if vr_p is not None:
+        return float(vr_p)
+    return 1.0 / max(int(m), 1)
+
+
+class VarianceReducer:
+    """Convenience facade: the snapshot probability bundled with the VR
+    algebra, for callers that drive the layer directly rather than through
+    ``CompressionConfig(vr=True)`` (the aggregation paths use the free
+    functions — the probability there lives in the config)."""
+
+    def __init__(self, p: float):
+        if not 0.0 < p <= 1.0:
+            raise ValueError(f"snapshot probability must be in (0, 1], got {p}")
+        self.p = float(p)
+
+    init = staticmethod(init_vr)
+    control_variate = staticmethod(control_variate)
+    refresh = staticmethod(refresh)
+
+    def coin(self, worker_key: jax.Array) -> jax.Array:
+        return vr_coin(worker_key, self.p)
+
+    def coins(self, key: jax.Array, n_workers: int) -> jax.Array:
+        return reference_coins(key, self.p, n_workers)
+
+    @classmethod
+    def for_finite_sum(cls, m: int, vr_p: Optional[float] = None) -> "VarianceReducer":
+        return cls(resolve_vr_p(vr_p, m))

@@ -36,6 +36,7 @@ from repro.compat import shard_map
 from repro.configs import get_config, get_shape, input_specs
 from repro.core.compression import CompressionConfig
 from repro.core.diana import DianaState, aggregate_shardmap
+from repro.core.vr import VRState, resolve_vr_p
 from repro.models import init_model, train_loss
 from repro.models.sharding import GSPMDPolicy, sharding_policy
 from repro.optim import DianaOptimizer, momentum, adamw, constant_schedule
@@ -96,6 +97,8 @@ def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: floa
         worker_axes=cfg.comp_worker_axes,
         h_dtype=cfg.h_dtype,
         bucketed=cfg.comp_bucketed,
+        vr=cfg.vr,
+        vr_p=cfg.vr_p,
     )
     inner_opt = adamw() if inner == "adamw" else momentum(beta)
     return DianaOptimizer(comp, inner_opt, schedule=constant_schedule(lr))
@@ -116,6 +119,20 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
 
     wtuple = waxes if len(waxes) != 1 else waxes[0]
 
+    vr_shard = None
+    if opt.compression.vr:
+        # VR (snapshot, mu) mirror the params' inner sharding with the worker
+        # dim prepended (manual-sharded like h_worker) — fsdp axes and waxes
+        # are disjoint by construction, so the specs never collide.
+        def to_vr(s):
+            return NamedSharding(mesh, P(wtuple if waxes else None, *s))
+
+        vr_leaf = lambda s: isinstance(s, P)
+        vr_shard = VRState(
+            snapshot=jax.tree_util.tree_map(to_vr, pspecs, is_leaf=vr_leaf),
+            mu=jax.tree_util.tree_map(to_vr, pspecs, is_leaf=vr_leaf),
+        )
+
     if opt.compression.bucketed:
         # Single flat (n, Dp) / (Dp,) memory buffers: worker dim manual-
         # sharded; the flat dim shards over 'model' when the padded size
@@ -134,6 +151,7 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
         diana_shard = DianaState(
             h_worker=NamedSharding(mesh, P(wtuple if waxes else None, flat_axis)),
             h_server=NamedSharding(mesh, P(flat_axis)),
+            vr=vr_shard,
         )
     else:
         h_specs = h_flat_specs(pspecs)
@@ -142,6 +160,7 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
                 lambda s: NamedSharding(mesh, P(wtuple if waxes else None, *s)), h_specs
             ),
             h_server=jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), h_specs),
+            vr=vr_shard,
         )
     # inner optimizer state mirrors params (momentum/adam buffers)
     inner_shard = _inner_shardings(opt_state_shape.inner, p_shard, mesh)
@@ -219,9 +238,25 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
         # unpartitionable PartitionId under partial-manual on old XLA).
         policy = GSPMDPolicy(mesh, manual=waxes)
         with sharding_policy(policy):
-            loss, grads = jax.value_and_grad(
-                lambda p: train_loss(p, batch, cfg, window=window)
-            )(params)
+            loss_fn = lambda p: train_loss(p, batch, cfg, window=window)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+
+            vr_kwargs = {}
+            if opt_state.diana.vr is not None:
+                # VR-DIANA: second backward at this worker's snapshot on the
+                # SAME batch.  The refresh candidate for mu is the minibatch
+                # gradient at x — the streaming stand-in for the finite-sum
+                # mean (DESIGN.md §VR); step 0 forces a refresh so the
+                # zeros-init mu never drives a whole epoch.
+                snap_own = jax.tree_util.tree_map(
+                    lambda s: s[0], opt_state.diana.vr.snapshot
+                )
+                g_snap = jax.grad(loss_fn)(snap_own)
+                vr_kwargs = dict(
+                    vr_aux=(g_snap, grads),
+                    params_local=params,
+                    vr_force_refresh=opt_state.step == 0,
+                )
 
             wkey = jax.random.fold_in(key, widx[0])
             # Nested fully-manual aggregation where the toolchain supports
@@ -240,6 +275,7 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
                 grad_specs=gspecs,
                 h_specs=h_flat_specs(gspecs) if gspecs is not None else None,
                 mesh=mesh,
+                **vr_kwargs,
             )
             if waxes:
                 loss = jax.lax.pmean(loss, waxes)
@@ -262,9 +298,17 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
         return rep
 
     def opt_spec_tree(opt_state_shape):
+        dvr = opt_state_shape.diana.vr
+        vr_spec = None
+        if dvr is not None:
+            vr_spec = VRState(
+                snapshot=jax.tree_util.tree_map(lambda _: P(wtuple), dvr.snapshot),
+                mu=jax.tree_util.tree_map(lambda _: P(wtuple), dvr.mu),
+            )
         diana_spec = DianaState(
             h_worker=jax.tree_util.tree_map(lambda _: P(wtuple), opt_state_shape.diana.h_worker),
             h_server=jax.tree_util.tree_map(lambda _: rep, opt_state_shape.diana.h_server),
+            vr=vr_spec,
         )
         return DianaOptState(
             step=rep,
@@ -341,6 +385,13 @@ def main(argv=None):
     ap.add_argument("--per-leaf-agg", action="store_true",
                     help="disable the bucketed (flat-buffer) aggregation and "
                          "compress/gather/decode each parameter leaf separately")
+    ap.add_argument("--vr", action="store_true",
+                    help="VR-DIANA (arXiv:1904.05115): per-worker L-SVRG "
+                         "control variates under the compressed-difference "
+                         "loop (one extra backward pass per step)")
+    ap.add_argument("--vr-p", type=float, default=None,
+                    help="L-SVRG snapshot-refresh probability; default is the "
+                         "paper's 1/m with m = the per-worker batch size")
     ap.add_argument("--mesh", default=None, help="e.g. 2x2 (data x model) or 2x2x2")
     ap.add_argument("--reduced", action="store_true", help="toy config for CPU runs")
     ap.add_argument("--batch", type=int, default=None, help="override global batch")
@@ -374,6 +425,12 @@ def main(argv=None):
         mesh = make_mesh(dims, axes)
     else:
         mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+
+    if args.vr:
+        smesh0, waxes0 = resolve_train_mesh(mesh, cfg.comp_worker_axes)
+        m_local = max(1, shape.global_batch // max(worker_count(smesh0, waxes0), 1))
+        cfg = dc_replace(cfg, vr=True,
+                         vr_p=resolve_vr_p(args.vr_p, m_local))
 
     opt = make_optimizer(cfg, lr=args.lr, inner=args.inner)
     key = jax.random.PRNGKey(0)

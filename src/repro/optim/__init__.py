@@ -1,4 +1,4 @@
-"""Optimizers: inner rules, schedules, and the DIANA wrapper."""
+"""Optimizers: inner rules, schedules, and the DIANA / VR-DIANA wrapper."""
 
 from .optimizers import (
     Optimizer,
@@ -10,9 +10,12 @@ from .optimizers import (
     warmup_cosine_schedule,
 )
 from .diana_optimizer import DianaOptimizer, DianaOptState
+# VR-DIANA state/knob helpers, re-exported for optimizer users (the `vr=`
+# knob on DianaOptimizer grows this slot; resolve_vr_p owns the 1/m default).
+from repro.core.vr import VRState, resolve_vr_p
 
 __all__ = [
     "Optimizer", "sgd", "momentum", "adamw",
     "constant_schedule", "diana_decreasing_schedule", "warmup_cosine_schedule",
-    "DianaOptimizer", "DianaOptState",
+    "DianaOptimizer", "DianaOptState", "VRState", "resolve_vr_p",
 ]

@@ -1,8 +1,8 @@
 """DianaOptimizer — the paper's full iterate as a composable update rule.
 
-Per step (Algorithm 1):
+Per step (Algorithm 1; with ``vr`` the VR-DIANA iterate of arXiv:1904.05115):
     1. per-worker grads g_i            (caller, inside shard_map)
-    2. ghat, h updates                 (core.diana.aggregate_shardmap)
+    2. ghat, h (+ VR snapshot) updates (core.diana.aggregate_shardmap)
     3. v = inner optimizer on ghat     (momentum beta -> paper's v^k)
     4. x = prox_{gamma R}(x + update)  (core.prox)
 
@@ -14,6 +14,7 @@ optimizers are the same code.
 
 from __future__ import annotations
 
+from dataclasses import replace as _dc_replace
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -34,7 +35,15 @@ class DianaOptState(NamedTuple):
 
 
 class DianaOptimizer:
-    """Bundles compression config + inner optimizer + schedule + regularizer."""
+    """Bundles compression config + inner optimizer + schedule + regularizer.
+
+    ``vr=True`` switches the iterate to VR-DIANA: ``init`` grows the
+    per-worker L-SVRG (snapshot, mu) slot inside :class:`DianaState` and the
+    training step must feed the snapshot gradients through
+    ``aggregate_shardmap``'s ``vr_aux`` (launch/train.py does).  ``vr_p``
+    overrides the snapshot probability (None keeps the config's value or the
+    ``1/m`` default the caller resolves).
+    """
 
     def __init__(
         self,
@@ -43,7 +52,15 @@ class DianaOptimizer:
         schedule: Callable = None,
         regularizer: Regularizer = None,
         lr: float = 1e-3,
+        vr: Optional[bool] = None,
+        vr_p: Optional[float] = None,
     ):
+        if vr is not None or vr_p is not None:
+            compression = _dc_replace(
+                compression,
+                vr=compression.vr if vr is None else vr,
+                vr_p=compression.vr_p if vr_p is None else vr_p,
+            )
         self.compression = compression
         self.inner = inner
         self.schedule = schedule or constant_schedule(lr)
@@ -54,12 +71,34 @@ class DianaOptimizer:
         """The registry-resolved compression operator this optimizer runs."""
         return self.compression.make()
 
+    @property
+    def variance_reduced(self) -> bool:
+        """Whether this optimizer runs the VR-DIANA iterate."""
+        return self.compression.vr
+
     def init(self, params, n_workers: int) -> DianaOptState:
         return DianaOptState(
             step=jnp.zeros((), jnp.int32),
             inner=self.inner.init(params),
             diana=init_state(params, self.compression, n_workers),
         )
+
+    def refresh_snapshot(self, state: DianaOptState, params, mu) -> DianaOptState:
+        """Deterministically refresh EVERY worker's L-SVRG snapshot to
+        ``params`` with control variate ``mu`` (leaves ``(n_workers, *shape)``
+        — each worker's full local gradient at ``params``).
+
+        The probabilistic per-step refresh lives inside the aggregation
+        round; this is the epoch-mode escape hatch (classic SVRG outer loop,
+        or warm-starting ``mu`` right after ``init`` so the first steps run
+        with exact semantics instead of waiting for a coin).
+        """
+        from repro.core.vr import refresh
+
+        assert state.diana.vr is not None, "refresh_snapshot needs vr=True"
+        n = jax.tree_util.tree_leaves(state.diana.vr.mu)[0].shape[0]
+        new_vr = refresh(state.diana.vr, jnp.ones((n,), bool), params, mu)
+        return state._replace(diana=state.diana._replace(vr=new_vr))
 
     def apply_direction(self, params, ghat, state: DianaOptState, new_diana: DianaState):
         """Steps 3-4: inner update on the aggregated estimator + prox."""

@@ -59,3 +59,53 @@ def test_missing_leaf_raises(tmp_path):
 def test_no_tmp_litter(tmp_path):
     save_checkpoint(str(tmp_path), 3, _tree())
     assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+# ---------------------------------------------------------------------------
+# DianaState round-trips: bucketed layout and the VR slot
+# ---------------------------------------------------------------------------
+
+def _diana_state(bucketed: bool, vr: bool):
+    """A populated (non-zero) DianaState in the requested layout."""
+    from repro.core import CompressionConfig, init_state
+
+    params = {"w": jnp.ones((6, 4), jnp.bfloat16) * 0.5, "b": jnp.zeros((10,))}
+    cfg = CompressionConfig(method="diana", block_size=16, bucketed=bucketed,
+                            vr=vr, vr_p=0.25 if vr else None)
+    st = init_state(params, cfg, 3)
+    fill = lambda t: jax.tree_util.tree_map(
+        lambda x: (jnp.arange(x.size, dtype=jnp.float32)
+                   .reshape(x.shape).astype(x.dtype)), t)
+    st = st._replace(h_worker=fill(st.h_worker), h_server=fill(st.h_server))
+    if vr:
+        st = st._replace(vr=st.vr._replace(mu=fill(st.vr.mu)))
+    return st
+
+
+@pytest.mark.parametrize("bucketed", [False, True], ids=["perleaf", "bucketed"])
+@pytest.mark.parametrize("vr", [False, True], ids=["plain", "vr"])
+def test_diana_state_roundtrip(tmp_path, bucketed, vr):
+    """The bucketed single-buffer layout and the VR (snapshot, mu) slot
+    round-trip exactly — dtypes (incl. the bf16 snapshot leaves), shapes and
+    values; with vr off the state carries no vr keys at all."""
+    st = _diana_state(bucketed, vr)
+    save_checkpoint(str(tmp_path), 11, {"diana": st})
+    restored, step = restore_checkpoint(str(tmp_path), {"diana": st})
+    assert step == 11
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    import json
+    with open(os.path.join(tmp_path, "manifest.json")) as f:
+        keys = json.load(f)["keys"]
+    assert any("/vr/" in k for k in keys) == vr
+
+
+def test_pre_vr_checkpoint_into_vr_template_hints(tmp_path):
+    """Restoring a vr=False checkpoint into a vr-enabled template fails with
+    a KeyError that names the missing vr slot (no silent zero-filling)."""
+    save_checkpoint(str(tmp_path), 0, {"diana": _diana_state(True, False)})
+    with pytest.raises(KeyError, match="vr"):
+        restore_checkpoint(str(tmp_path), {"diana": _diana_state(True, True)})

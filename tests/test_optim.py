@@ -89,3 +89,32 @@ def test_diana_state_is_flat_and_sized():
     state = opt.init(params, n_workers=5)
     assert state.diana.h_worker["w"].shape == (5, 24)
     assert state.diana.h_server["b"].shape == (3,)
+
+
+def test_diana_optimizer_vr_knob_and_refresh_snapshot():
+    """The vr= knob grows the L-SVRG slot and refresh_snapshot (epoch-mode /
+    warm-start) installs params + per-worker mu on every worker at once."""
+    comp = CompressionConfig(block_size=4)
+    opt = DianaOptimizer(comp, momentum(0.9), lr=0.1, vr=True, vr_p=0.25)
+    assert opt.variance_reduced and opt.compression.vr_p == 0.25
+    params = {"w": jnp.full((4, 6), 2.0), "b": jnp.zeros((3,))}
+    state = opt.init(params, n_workers=3)
+    assert state.diana.vr is not None
+    assert state.diana.vr.snapshot["w"].shape == (3, 4, 6)
+    np.testing.assert_array_equal(np.asarray(state.diana.vr.mu["w"]), 0.0)
+
+    mu = {"w": jnp.arange(3 * 24, dtype=jnp.float32).reshape(3, 4, 6),
+          "b": jnp.ones((3, 3))}
+    new_x = {"w": jnp.full((4, 6), 5.0), "b": jnp.full((3,), -1.0)}
+    state = opt.refresh_snapshot(state, new_x, mu)
+    np.testing.assert_array_equal(np.asarray(state.diana.vr.snapshot["w"]), 5.0)
+    np.testing.assert_array_equal(np.asarray(state.diana.vr.snapshot["b"]), -1.0)
+    np.testing.assert_array_equal(np.asarray(state.diana.vr.mu["w"]),
+                                  np.arange(3 * 24, dtype=np.float32).reshape(3, 4, 6))
+
+    # vr off: no slot, refresh_snapshot refuses
+    plain = DianaOptimizer(comp, momentum(0.9), lr=0.1)
+    pstate = plain.init(params, n_workers=3)
+    assert pstate.diana.vr is None
+    with pytest.raises(AssertionError):
+        plain.refresh_snapshot(pstate, new_x, mu)
