@@ -12,7 +12,13 @@ repo root so every PR from here on has a perf trajectory:
 
 Each (size, operator, path) cell is timed for both layouts; the JSON also
 records the per-layout payload collective count implied by the leaf count
-(leaves x fields vs 1) for the HBM/collective table in DESIGN.md §Perf.
+(leaves x fields vs 1) for the HBM/collective table in DESIGN.md §Perf, and
+PER-DIRECTION wire accounting: ``uplink_bits_per_dim`` (worker -> server
+payload), ``downlink_bits_per_dim`` (the broadcast — 32 for uplink-only
+configs, the downlink operator's rate for bidirectional rows, DESIGN.md
+§Bidirectional) and their ``bits_per_dim_total``.  The operator grid includes
+a bidirectional ``diana+down`` row so the uplink-vs-total trade-off is part
+of the committed trajectory.
 
 Run directly (``python -m benchmarks.bench_step_time [--smoke]``) or via
 ``benchmarks.run``.  ``--smoke`` cuts steps/reps for CI but keeps the full
@@ -54,16 +60,21 @@ SIZES = {
     "small": _layered(8, 32, (64, 32)),
     "medium": _layered(16, 64, (256, 64)),
 }
-# smoke keeps the 2-sizes x 3-operators shape but compiles ~4x less
+# smoke keeps the 2-sizes x >=3-operators shape (incl. the bidirectional
+# diana+down row) but compiles ~4x less
 SIZES_SMOKE = {
     "tiny": _layered(4, 16, (32, 16)),
     "small": SIZES["small"],
 }
 
+# (row label, registry method, CompressionConfig kwargs)
 OPERATORS = [
-    ("diana", dict(block_size=256, p=math.inf)),
-    ("natural", {}),
-    ("randk", dict(k=32)),
+    ("diana", "diana", dict(block_size=256, p=math.inf)),
+    ("natural", "natural", {}),
+    ("randk", "randk", dict(k=32)),
+    # bidirectional: compressed broadcast with downlink memory
+    ("diana+down", "diana", dict(block_size=256, p=math.inf,
+                                 down_method="diana")),
 ]
 
 
@@ -108,30 +119,35 @@ def _setup_shardmap(params, cfg, key):
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
+    from repro.core.diana import DOWN_FOLD
     from repro.launch.mesh import make_mesh
 
     mesh = make_mesh((N_WORKERS, 1), ("data", "model"))
     grads = _grads(params, N_WORKERS, key)
     state = init_state(params, cfg, N_WORKERS)
+    has_down = state.h_down is not None
 
-    def body(gs, h_w, h_s, k):
+    def body(gs, h_w, h_s, h_d, k):
         g_local = jax.tree_util.tree_map(lambda g: g[0], gs)
         wkey = jax.random.fold_in(k, jax.lax.axis_index("data"))
+        kw = dict(down_key=jax.random.fold_in(k, DOWN_FOLD)) if has_down else {}
         ghat, new = aggregate_shardmap(
-            g_local, DianaState(h_w, h_s), wkey, cfg,
-            axis_names=("data",), n_workers=N_WORKERS)
-        return ghat, new.h_worker, new.h_server
+            g_local, DianaState(h_w, h_s, None, h_d), wkey, cfg,
+            axis_names=("data",), n_workers=N_WORKERS, **kw)
+        return ghat, new.h_worker, new.h_server, new.h_down
 
+    tmap = jax.tree_util.tree_map
+    hd_spec = tmap(lambda _: P(), state.h_down)
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(jax.tree_util.tree_map(lambda _: P("data"), grads),
-                  jax.tree_util.tree_map(lambda _: P("data"), state.h_worker),
-                  jax.tree_util.tree_map(lambda _: P(), state.h_server), P()),
-        out_specs=(jax.tree_util.tree_map(lambda _: P(), params),
-                   jax.tree_util.tree_map(lambda _: P("data"), state.h_worker),
-                   jax.tree_util.tree_map(lambda _: P(), state.h_server)),
+        in_specs=(tmap(lambda _: P("data"), grads),
+                  tmap(lambda _: P("data"), state.h_worker),
+                  tmap(lambda _: P(), state.h_server), hd_spec, P()),
+        out_specs=(tmap(lambda _: P(), params),
+                   tmap(lambda _: P("data"), state.h_worker),
+                   tmap(lambda _: P(), state.h_server), hd_spec),
         axis_names={"data"}, check_vma=False)
-    return jax.jit(fn), (grads, state.h_worker, state.h_server, key)
+    return jax.jit(fn), (grads, state.h_worker, state.h_server, state.h_down, key)
 
 
 PATHS = {
@@ -147,7 +163,7 @@ def collect(smoke: bool = False):
     sizes = SIZES_SMOKE if smoke else SIZES
     for size_name, spec in sizes.items():
         params = _params(spec)
-        for method, kw in OPERATORS:
+        for label, method, kw in OPERATORS:
             for path, setup in PATHS.items():
                 cells = {}
                 for layout in ("perleaf", "bucketed"):
@@ -158,19 +174,37 @@ def collect(smoke: bool = False):
                 if not cells:
                     continue
                 cell = _timeit_interleaved(cells, reps)
-                lay = bucket_layout(CompressionConfig(method=method, bucketed=True, **kw), params)
+                cfg_b = CompressionConfig(method=method, bucketed=True, **kw)
+                lay = bucket_layout(cfg_b, params)
+                up_bits, down_bits = _direction_bits(cfg_b, params, lay)
                 rows.append({
                     "size": size_name,
                     "n_params": lay.size,
                     "n_leaves": lay.n_leaves,
-                    "operator": method,
+                    "operator": label,
                     "path": path,
                     "us_perleaf": cell.get("perleaf"),
                     "us_bucketed": cell.get("bucketed"),
                     "speedup": (cell["perleaf"] / cell["bucketed"]
                                 if "perleaf" in cell and "bucketed" in cell else None),
+                    "uplink_bits_per_dim": round(up_bits, 4),
+                    "downlink_bits_per_dim": round(down_bits, 4),
+                    "bits_per_dim_total": round(up_bits + down_bits, 4),
                 })
     return rows
+
+
+def _direction_bits(cfg, params, lay):
+    """Honest per-direction wire cost per coordinate: size-weighted per-leaf
+    accounting for the uplink payload, the downlink operator's rate (or the
+    32-bit f32 broadcast) for the server direction."""
+    from repro.core import bucketed_compressor
+
+    up = bucketed_compressor(cfg, lay).bits_per_dim()
+    dcfg = cfg.down_config()
+    if dcfg is None:
+        return up, 32.0
+    return up, bucketed_compressor(dcfg, bucket_layout(dcfg, params)).bits_per_dim()
 
 
 def write_json(rows, path=OUT_PATH):

@@ -36,10 +36,13 @@ def timed(fn: Callable, *args, reps: int = 3) -> float:
 
 def run_logreg(method: str, p: float, *, steps: int, gamma: float, block: int,
                beta: float = 0.0, alpha=None, k: int = 64, l1=0.0,
-               n_workers: int = 10, seed: int = 0, problem=None):
+               n_workers: int = 10, seed: int = 0, problem=None,
+               down_method=None, down_k=None):
     """Distributed (reference-simulated) regularized logistic regression.
 
-    Returns dict with loss trajectory, final distance to x*, sparsity stats.
+    ``down_method`` compresses the server broadcast too (bidirectional
+    DIANA, DESIGN.md §Bidirectional).  Returns dict with loss trajectory,
+    final distance to x*, sparsity stats.
     """
     from repro.configs.diana_paper import LogRegProblem
     from repro.core.prox import l1 as l1_reg, none as no_reg
@@ -61,7 +64,8 @@ def run_logreg(method: str, p: float, *, steps: int, gamma: float, block: int,
         return float(jnp.mean(jnp.log1p(jnp.exp(-z))) + 0.5 * l2 * w @ w
                      + reg.tree_value({"w": w}))
 
-    cfg = CompressionConfig(method=method, p=p, block_size=block, alpha=alpha, k=k)
+    cfg = CompressionConfig(method=method, p=p, block_size=block, alpha=alpha,
+                            k=k, down_method=down_method, down_k=down_k)
     params = {"x": jnp.zeros((prob.dim,))}
     state = reference_init(params, cfg, prob.n_workers)
     key = jax.random.PRNGKey(seed)

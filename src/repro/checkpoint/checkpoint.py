@@ -2,10 +2,11 @@
 
 Handles bf16 leaves via ml_dtypes (a JAX dependency), preserves tree structure
 through key-path flattening, and round-trips DianaOptState / model params /
-caches alike — including the optional VR-DIANA slot (`DianaState.vr`): when
-present its (snapshot, mu) leaves flatten under `.../vr/...` key paths like
-any other state, and when it is None the NamedTuple child flattens away, so
-VR-off checkpoints carry no dead keys.  Writes are atomic (tmp + rename) — a
+caches alike — including the optional VR-DIANA slot (`DianaState.vr`) and the
+optional downlink memory (`DianaState.h_down`): when present their leaves
+flatten under `.../vr/...` / `.../h_down/...` key paths like any other state,
+and when None the NamedTuple child flattens away, so checkpoints written with
+those features off carry no dead keys.  Writes are atomic (tmp + rename) — a
 crashed save never corrupts the previous checkpoint.
 """
 
@@ -93,10 +94,16 @@ def restore_checkpoint(directory: str, template, step: int | None = None):
         key = "/".join(_path_str(p) for p in kpath)
         if key not in data:
             hint = ""
-            if "/vr/" in f"/{key}/":
+            parts = key.split("/")
+            if "vr" in parts:
                 hint = (" — the checkpoint was saved without a VR slot "
                         "(vr=False); restore into a matching template or "
                         "re-init the VR state after restoring the rest")
+            elif "h_down" in parts:
+                hint = (" — the checkpoint was saved without a downlink "
+                        "memory (down_method=None); restore into a matching "
+                        "template or re-init h_down (zeros) after restoring "
+                        "the rest")
             raise KeyError(f"checkpoint missing leaf {key!r}{hint}")
         arr = data[key]
         saved_dtype = dtypes.get(key, str(arr.dtype))

@@ -101,6 +101,10 @@ class ModelConfig:
                                    # the compressed-difference loop (core.vr)
     vr_p: Optional[float] = None   # snapshot-refresh probability; None = the
                                    # paper's 1/m (resolved by launch/train.py)
+    comp_down_method: Optional[str] = None  # downlink (server->worker)
+                                   # compressor for the broadcast direction;
+                                   # None = full-precision broadcast
+    comp_down_k: Optional[int] = None  # sparse downlink budget; None = comp_k
     h_dtype: Any = jnp.float32
 
     @property

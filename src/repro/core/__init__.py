@@ -12,7 +12,12 @@ from .quantization import (
     quantization_variance,
 )
 from .packing import pack2bit, unpack2bit, packed_nbytes, PACK_FACTOR
-from .compression import CompressionConfig, compress_tree, decompress_tree, payload_bits_per_dim
+from .compression import (
+    CompressionConfig,
+    compress_tree,
+    decompress_tree,
+    payload_bits_per_dim,
+)
 from .compressors import (
     Compressor,
     Payload,
@@ -30,7 +35,10 @@ from .vr import (
     vr_coin,
 )
 from .diana import (
+    DOWN_FOLD,
     DianaState,
+    downlink_round,
+    init_downlink,
     init_state,
     aggregate_shardmap,
     bucket_layout,
@@ -49,6 +57,7 @@ __all__ = [
     "BucketLayout", "BucketedCompressor", "bucketed_compressor", "bucket_layout",
     "VarianceReducer", "VRState", "control_variate", "init_vr", "refresh",
     "resolve_vr_p", "vr_coin",
-    "DianaState", "init_state", "aggregate_shardmap", "reference_init", "reference_step",
+    "DianaState", "DOWN_FOLD", "init_state", "init_downlink", "downlink_round",
+    "aggregate_shardmap", "reference_init", "reference_step",
     "tree_zeros_like", "prox",
 ]

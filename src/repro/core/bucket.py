@@ -16,7 +16,9 @@ kernel launches per step.  This module provides the single-vector formulation:
   ``decode_sum`` launch.
 * payload **wire fusion** (:func:`fuse_payload` / :func:`unfuse_payload`) —
   every Payload field byte-cast into one contiguous uint8 buffer so the
-  gather really is a single collective, not one per field.
+  gather really is a single collective, not one per field.  The compressed
+  downlink broadcast (DESIGN.md §Bidirectional) shares this path via
+  :func:`wire_roundtrip`: one uint8 wire object per direction per step.
 
 Bitwise contract: the bucketed path reproduces the per-leaf path EXACTLY
 (same PRNG draws per segment, same per-block scales, same f32 summation
@@ -45,6 +47,7 @@ __all__ = [
     "fuse_payload",
     "payload_recipe",
     "unfuse_payload",
+    "wire_roundtrip",
 ]
 
 
@@ -170,6 +173,22 @@ def fuse_payload(pay: Payload) -> jax.Array:
         b = jax.lax.bitcast_convert_type(f, jnp.uint8)
         parts.append(b.reshape(lead, -1))
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def wire_roundtrip(pay: Payload) -> Payload:
+    """Materialise a payload's single-buffer wire object and split it back.
+
+    The compressed DOWNLINK broadcast (repro.core.diana.downlink_round) rides
+    the same fused uint8 path as the uplink gather — in the BUCKETED layout,
+    like the uplink: every populated field byte-casts into ONE contiguous
+    buffer — the object a real parameter server would put on the broadcast
+    wire — and unfuses on receipt.
+    ``bitcast`` is exact, so riding the wire cannot perturb the bitwise
+    decode contract; a single-field payload already IS one wire object.
+    """
+    if sum(f is not None for f in pay) <= 1:
+        return pay
+    return unfuse_payload(fuse_payload(pay), payload_recipe(pay))
 
 
 def unfuse_payload(buf: jax.Array, recipe) -> Payload:

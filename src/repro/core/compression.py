@@ -71,6 +71,16 @@ class CompressionConfig:
                  ``1/m`` default, resolved by the caller who knows the local
                  finite-sum size (repro.core.vr.resolve_vr_p); must be
                  concrete by aggregation time.
+    down_method: downlink (server -> worker) compressor for the aggregated
+                 direction ``ghat`` — any registry name/alias, with its own
+                 memory ``h_down`` (DESIGN.md §Bidirectional).  ``None``
+                 (default) keeps the broadcast full-precision and the state
+                 layout byte-identical to a uplink-only config.
+    down_k:      kept coordinates for a sparse downlink operator.  ``None``
+                 inherits ``k``.
+    down_bucketed: downlink layout — ``True`` compresses ghat as ONE flat
+                 buffer in the downlink operator's own BucketLayout, ``False``
+                 per leaf.  ``None`` (default) follows ``bucketed``.
     """
 
     method: str = "diana"
@@ -84,9 +94,14 @@ class CompressionConfig:
     bucketed: bool = False
     vr: bool = False
     vr_p: Optional[float] = None
+    down_method: Optional[str] = None
+    down_k: Optional[int] = None
+    down_bucketed: Optional[bool] = None
 
     def __post_init__(self):
         canonical_name(self.method)  # raises on unknown methods
+        if self.down_method is not None:
+            canonical_name(self.down_method)
         if self.block_size % 4:
             raise ValueError("block_size must be a multiple of 4 for 2-bit packing")
         if self.vr_p is not None and not 0.0 < self.vr_p <= 1.0:
@@ -106,6 +121,37 @@ class CompressionConfig:
         intended semantics (the backend cannot change under a live process).
         """
         return _make_cached(self)
+
+    def down_config(self) -> Optional["CompressionConfig"]:
+        """The derived config of the DOWNLINK operator, or ``None``.
+
+        The downlink is the same registry surface pointed at the server
+        direction: ``down_method`` resolves through the identical factory,
+        ``down_k``/``down_bucketed`` default to the uplink's ``k``/layout,
+        and VR never applies (it is a worker-side estimator transform).  The
+        derived config is a plain frozen dataclass, so ``make()`` memoization
+        and the bucketed-compressor cache work on it unchanged.
+        """
+        if self.down_method is None:
+            return None
+        from dataclasses import replace
+
+        return replace(
+            self,
+            method=self.down_method,
+            k=self.k if self.down_k is None else self.down_k,
+            bucketed=self.bucketed if self.down_bucketed is None else self.down_bucketed,
+            down_method=None,
+            down_k=None,
+            down_bucketed=None,
+            vr=False,
+            vr_p=None,
+        )
+
+    @property
+    def bidirectional(self) -> bool:
+        """Whether the server broadcast is compressed too."""
+        return self.down_method is not None
 
     # ----------------------------------------------- legacy introspection
 
@@ -183,5 +229,12 @@ def decompress_tree(payload, like, cfg: CompressionConfig):
 
 def payload_bits_per_dim(cfg: CompressionConfig, d: Optional[int] = None) -> float:
     """Communication cost per coordinate of the configured operator (``d`` is
-    required for honest accounting of the sparse index+value payloads)."""
+    required for honest accounting of the sparse index+value payloads).
+
+    Per-DIRECTION accounting (uplink payload + downlink broadcast, with
+    size-weighted per-leaf costs) lives in
+    ``benchmarks/bench_step_time.py::_direction_bits`` — it needs the model's
+    :class:`~repro.core.bucket.BucketLayout`, which a bare config cannot
+    provide.
+    """
     return cfg.make().bits_per_dim(d)

@@ -21,7 +21,9 @@ a canonical operator plus overrides (the paper's Sec. 3 special cases):
 
 Registering a new operator is one :func:`register` call; it is immediately
 reachable from ``CompressionConfig(method=...)``, the trainer CLI and the
-benchmarks.
+benchmarks — and usable as a DOWNLINK operator for the compressed server
+broadcast (``CompressionConfig(down_method=...)``, DESIGN.md §Bidirectional)
+with no extra code: the memory hooks serve both directions.
 """
 
 from __future__ import annotations

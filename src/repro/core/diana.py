@@ -33,20 +33,37 @@ from typing import Any, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from .bucket import BucketLayout, bucketed_compressor, fuse_payload, payload_recipe, unfuse_payload
+from .bucket import (
+    BucketLayout,
+    bucketed_compressor,
+    fuse_payload,
+    payload_recipe,
+    unfuse_payload,
+    wire_roundtrip,
+)
 from .compression import CompressionConfig
 from .compressors import Compressor, Payload
 from .vr import VRState, control_variate, init_vr, reference_coins, refresh, vr_coin
 
 __all__ = [
     "DianaState",
+    "DOWN_FOLD",
     "init_state",
+    "init_downlink",
+    "downlink_round",
     "aggregate_shardmap",
     "reference_init",
     "reference_step",
     "tree_zeros_like",
     "bucket_layout",
 ]
+
+# Folded into the UN-worker-folded step key for the downlink draws; disjoint
+# from the compression schedule (which folds worker indices then splits over
+# leaves) and from the VR coin fold (applied to worker-folded keys), so the
+# broadcast's PRNG stream is identical on every worker and never collides
+# with an uplink draw.  DESIGN.md §Bidirectional.
+DOWN_FOLD = 0x444E  # 'DN'
 
 
 def tree_zeros_like(tree, dtype=None):
@@ -86,11 +103,21 @@ class DianaState(NamedTuple):
     h_worker) regardless of ``cfg.bucketed`` — VR algebra runs before any
     flattening.  ``None`` flattens away, so pre-VR code, checkpoints and
     shardings are untouched when VR is off.
+
+    h_down is the optional DOWNLINK memory (``cfg.down_method``): the
+    server-broadcast analogue of h_server — the alpha-memory of an unbiased
+    downlink operator, or the error-feedback residual of top-k — REPLICATED
+    over the worker axes (server and every worker evolve the identical copy
+    deterministically).  Stored flat in the DOWNLINK operator's own layout:
+    a pytree of ``(d_leaf,)`` leaves per-leaf, or one ``(Dp_down,)`` buffer
+    when the downlink is bucketed.  ``None`` flattens away, so uplink-only
+    states, checkpoints and shardings stay byte-identical.
     """
 
     h_worker: Any
     h_server: Any
     vr: Any = None
+    h_down: Any = None
 
 
 def bucket_layout(cfg: CompressionConfig, tree) -> BucketLayout:
@@ -99,23 +126,38 @@ def bucket_layout(cfg: CompressionConfig, tree) -> BucketLayout:
     return BucketLayout.for_tree(tree, align=cfg.make().bucket_align())
 
 
+def init_downlink(params, cfg: CompressionConfig, dtype=None):
+    """``h_down^0 = 0`` in the DOWNLINK operator's own layout (``None`` when
+    no downlink is configured) — one replicated copy, no worker dim."""
+    dcfg = cfg.down_config()
+    if dcfg is None:
+        return None
+    dtype = cfg.h_dtype if dtype is None else dtype
+    if dcfg.bucketed:
+        return jnp.zeros((bucket_layout(dcfg, params).padded_size,), dtype)
+    return jax.tree_util.tree_map(lambda p: jnp.zeros((p.size,), dtype), params)
+
+
 def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
     """h_i^0 = 0 (the paper's experimental choice) for all operators; the VR
     slot (``cfg.vr``) starts at ``w_i^0 = x^0`` with zero ``mu`` (see
-    :func:`repro.core.vr.init_vr` for how callers warm-start ``mu``)."""
+    :func:`repro.core.vr.init_vr` for how callers warm-start ``mu``); the
+    downlink memory (``cfg.down_method``) starts at ``h_down^0 = 0``."""
     vr = init_vr(params, n_workers) if cfg.vr else None
+    h_down = init_downlink(params, cfg)
     if cfg.bucketed:
         dp = bucket_layout(cfg, params).padded_size
         return DianaState(
             h_worker=jnp.zeros((n_workers, dp), cfg.h_dtype),
             h_server=jnp.zeros((dp,), cfg.h_dtype),
             vr=vr,
+            h_down=h_down,
         )
     h_w = jax.tree_util.tree_map(
         lambda p: jnp.zeros((n_workers, p.size), cfg.h_dtype), params
     )
     h_s = jax.tree_util.tree_map(lambda p: jnp.zeros((p.size,), cfg.h_dtype), params)
-    return DianaState(h_worker=h_w, h_server=h_s, vr=vr)
+    return DianaState(h_worker=h_w, h_server=h_s, vr=vr, h_down=h_down)
 
 
 # ---------------------------------------------------------------------------
@@ -216,8 +258,11 @@ def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_wo
         h_server, dhat_mean,
     )
 
+    # Reshape only — ghat stays f32; the caller casts to the gradient dtypes
+    # AFTER the (optional) downlink round, so the downlink compresses the
+    # same f32 server direction the reference path sees.
     ghat = jax.tree_util.tree_map(
-        lambda f, g: f.reshape(g.shape).astype(g.dtype), ghat_flat, grads_local
+        lambda f, g: f.reshape(g.shape), ghat_flat, grads_local
     )
     return ghat, new_hw, new_h_server
 
@@ -276,8 +321,84 @@ def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names, n
         h_server.astype(jnp.float32), dhat_mean
     ).astype(cfg.h_dtype)
     ghat_flat = comp.server_direction(h_server.astype(jnp.float32), dhat_mean)
-    ghat = layout.unflatten(ghat_flat, cast=True)
+    # f32 leaves — the caller casts to the gradient dtypes after the
+    # (optional) downlink round, like the per-leaf path.
+    ghat = layout.unflatten(ghat_flat, cast=False)
     return ghat, new_hw, new_hs
+
+
+# ---------------------------------------------------------------------------
+# Downlink: the compressed server broadcast (DESIGN.md §Bidirectional)
+# ---------------------------------------------------------------------------
+
+def downlink_round(ghat, h_down, down_key: jax.Array, cfg: CompressionConfig,
+                   *, h_dtype=None):
+    """Pass the aggregated direction ``ghat`` through the DOWNLINK compressor.
+
+    The gradient-difference trick DIANA applies uplink, applied to the server
+    broadcast: the (replicated, deterministic) server encodes
+    ``delta = compress_input(ghat, h_down)`` — ``ghat - h_down`` for
+    alpha-memory operators, the error-compensated ``ghat + e`` for top-k EF —
+    puts the payload on the broadcast (fused into ONE uint8 wire object in
+    the bucketed layout — :func:`wire_roundtrip`, bitcast-exact; per-leaf
+    payloads stay unfused, mirroring the uplink), and every receiver
+    reconstructs
+    ``server_direction(h_down, decode(payload))`` and advances the shared
+    memory with ``next_memory``.  Because ``ghat``, ``h_down`` and
+    ``down_key`` are identical on all workers, the broadcast needs no
+    collective here — replicated determinism plays the server, exactly as the
+    uplink's replicated decode does (DESIGN.md §3).
+
+    Runs AFTER ``server_direction`` on the param-shaped ``ghat`` tree and
+    makes its own layout decision (``cfg.down_config().bucketed``), so it
+    composes with every uplink operator, both uplink layouts, and VR.
+    ``down_key`` must be the step key folded with :data:`DOWN_FOLD` BEFORE
+    any worker fold — the broadcast draws are worker-independent.
+
+    Returns ``(ghat_hat, new_h_down)`` with ``ghat_hat`` shaped and typed
+    like ``ghat``.
+    """
+    dcfg = cfg.down_config()
+    assert dcfg is not None, "downlink_round needs cfg.down_method"
+    h_dtype = cfg.h_dtype if h_dtype is None else h_dtype
+
+    if dcfg.bucketed:
+        layout = bucket_layout(dcfg, ghat)
+        comp = bucketed_compressor(dcfg, layout)
+        g = layout.flatten(ghat)
+        h = h_down.astype(jnp.float32)
+        delta = comp.compress_input(g, h)
+        pay = wire_roundtrip(comp.compress(delta, down_key))
+        dhat = comp.decode(pay, layout.padded_size)
+        ghat_hat = layout.unflatten(comp.server_direction(h, dhat), cast=True)
+        new_h = comp.next_memory(h, dhat, delta).astype(h_dtype)
+        return ghat_hat, new_h
+
+    comp = dcfg.make()
+    g_flat = jax.tree_util.tree_map(
+        lambda x: x.reshape(-1).astype(jnp.float32), ghat
+    )
+    h = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), h_down)
+    delta = jax.tree_util.tree_map(comp.compress_input, g_flat, h)
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    keys = jax.random.split(down_key, len(leaves))
+    # Per-leaf payloads stay UNfused, mirroring the uplink (only the bucketed
+    # layout builds the single wire buffer): the fuse bitcasts RET_CHECK old
+    # XLA's partitioner under partial-manual bodies with live auto inner
+    # axes — exactly the meshes resolve_bucketed downgrades to this layout.
+    pays = [comp.compress(leaf, k) for leaf, k in zip(leaves, keys)]
+    dhat = jax.tree_util.tree_unflatten(
+        treedef, [comp.decode(p, leaf.size) for p, leaf in zip(pays, leaves)]
+    )
+    ghat_hat = jax.tree_util.tree_map(
+        lambda hh, dh, g: comp.server_direction(hh, dh).reshape(g.shape).astype(g.dtype),
+        h, dhat, ghat,
+    )
+    new_h = jax.tree_util.tree_map(
+        lambda hh, dh, dl: comp.next_memory(hh, dh, dl).astype(h_dtype),
+        h, dhat, delta,
+    )
+    return ghat_hat, new_h
 
 
 def aggregate_shardmap(
@@ -295,6 +416,7 @@ def aggregate_shardmap(
     vr_aux=None,
     params_local=None,
     vr_force_refresh=None,
+    down_key=None,
 ):
     """One DIANA aggregation round inside a shard_map body.
 
@@ -320,6 +442,13 @@ def aggregate_shardmap(
     The VR algebra runs on parameter-shaped trees BEFORE any layout
     decision, so it composes with every operator in both the per-leaf and
     bucketed layouts, and ``ghat`` is cast back to the gradients' dtypes.
+
+    With ``state.h_down`` present (``cfg.down_method``) the round is
+    BIDIRECTIONAL: the aggregated direction is itself passed through the
+    downlink compressor (:func:`downlink_round`) before being returned, and
+    callers must supply ``down_key = fold_in(key, DOWN_FOLD)`` computed from
+    the step key BEFORE the worker fold (the broadcast draws are identical on
+    every worker — repro.launch.train does this).
 
     With ``cfg.bucketed`` the round runs on the whole-model flat buffer
     (:func:`_aggregate_bucketed`: one compress, one fused all-gather, one
@@ -371,13 +500,21 @@ def aggregate_shardmap(
         axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
         grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
     )
-    if state.vr is not None:
-        # VR algebra ran in f32; restore the caller's gradient dtypes so the
-        # optimizer state layout is independent of the vr flag.
-        ghat = jax.tree_util.tree_map(
-            lambda f, g: f.astype(g.dtype), ghat, grads_local
-        )
-    return ghat, DianaState(h_worker=new_hw, h_server=new_hs, vr=new_vr)
+    new_h_down = state.h_down
+    if state.h_down is not None:
+        assert down_key is not None, (
+            "bidirectional aggregation needs down_key = fold_in(step_key, "
+            "DOWN_FOLD) derived BEFORE the worker fold (identical on all "
+            "workers)")
+        ghat, new_h_down = downlink_round(ghat, state.h_down, down_key, cfg)
+    # The round (and the downlink, when on) ran in f32 — the bits the
+    # reference path produces; restore the caller's gradient dtypes here so
+    # the optimizer state layout is independent of the vr/downlink flags.
+    ghat = jax.tree_util.tree_map(
+        lambda f, g: f.astype(g.dtype), ghat, grads_local
+    )
+    return ghat, DianaState(h_worker=new_hw, h_server=new_hs, vr=new_vr,
+                            h_down=new_h_down)
 
 
 def _dispatch_round(
@@ -451,10 +588,12 @@ class ReferenceState(NamedTuple):
     h_server: Any  # (d,) per leaf — flat (or (Dp,) bucketed)
     v: Any         # momentum buffer, like params
     vr: Any = None # optional VR-DIANA slot, mirroring DianaState.vr
+    h_down: Any = None  # optional downlink memory, mirroring DianaState.h_down
 
 
 def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceState:
     vr = init_vr(params, n_workers) if cfg.vr else None
+    h_down = init_downlink(params, cfg, dtype=jnp.float32)
     if cfg.bucketed:
         dp = bucket_layout(cfg, params).padded_size
         return ReferenceState(
@@ -462,6 +601,7 @@ def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceS
             h_server=jnp.zeros((dp,), jnp.float32),
             v=tree_zeros_like(params, jnp.float32),
             vr=vr,
+            h_down=h_down,
         )
     return ReferenceState(
         h_worker=jax.tree_util.tree_map(
@@ -472,6 +612,7 @@ def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceS
         ),
         v=tree_zeros_like(params, jnp.float32),
         vr=vr,
+        h_down=h_down,
     )
 
 
@@ -504,6 +645,12 @@ def reference_step(
     mu_candidate)`` stacks the distributed per-worker aux trees
     (``(n, *shape)`` leaves) and ``params`` is the current iterate.
 
+    With ``state.h_down`` present (``cfg.down_method``) the aggregated
+    direction additionally passes through the downlink compressor
+    (:func:`downlink_round`) before the momentum accumulate — the same
+    code and the same ``fold_in(key, DOWN_FOLD)`` stream as the distributed
+    path, so bitwise equality extends to bidirectional runs.
+
     The bucketed path scans over workers (``lax.scan``: one traced body
     regardless of n).  The per-leaf cross-check path deliberately keeps the
     unrolled Python loop: its callers (the convex experiments and the paper
@@ -530,9 +677,8 @@ def reference_step(
         new_vr = refresh(state.vr, coins, params, mu_cand)
 
     if cfg.bucketed:
-        v, new_state = _reference_step_bucketed(
-            grads_per_worker, state, key, cfg, beta=beta)
-        return v, new_state._replace(vr=new_vr)
+        ghat, new_state = _reference_agg_bucketed(grads_per_worker, state, key, cfg)
+        return _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta)
 
     comp = cfg.make()
     n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
@@ -585,16 +731,30 @@ def reference_step(
     ghat = jax.tree_util.tree_map(
         lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
     )
+    return _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta)
 
+
+def _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta):
+    """Shared reference tail: the downlink round (when configured) on the
+    param-shaped ``ghat`` — the SAME :func:`downlink_round` the distributed
+    path runs, with the same ``fold_in(key, DOWN_FOLD)`` stream — then the
+    momentum accumulate ``v = beta*v + ghat``."""
+    new_h_down = state.h_down
+    if state.h_down is not None:
+        ghat, new_h_down = downlink_round(
+            ghat, state.h_down, jax.random.fold_in(key, DOWN_FOLD), cfg,
+            h_dtype=jnp.float32,
+        )
     v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
-    return v, new_state._replace(v=v, vr=new_vr)
+    return v, new_state._replace(v=v, vr=new_vr, h_down=new_h_down)
 
 
-def _reference_step_bucketed(grads_per_worker, state, key, cfg, *, beta):
-    """:func:`reference_step` on the flat-buffer layout: scan over workers,
-    each round ONE compress on the flattened model; ONE decode_sum over the
-    scan-stacked payload.  Bitwise-equal to the per-leaf reference (same
-    draws, same recurrences) and to the distributed bucketed path."""
+def _reference_agg_bucketed(grads_per_worker, state, key, cfg):
+    """The bucketed reference AGGREGATION (uplink only — downlink and
+    momentum live in the shared :func:`_reference_finish` tail): scan over
+    workers, each round ONE compress on the flattened model; ONE decode_sum
+    over the scan-stacked payload.  Bitwise-equal to the per-leaf reference
+    (same draws, same recurrences) and to the distributed bucketed path."""
     layout = bucket_layout(cfg, jax.tree_util.tree_map(
         lambda g: g[0], grads_per_worker
     ))
@@ -622,6 +782,4 @@ def _reference_step_bucketed(grads_per_worker, state, key, cfg, *, beta):
         h_server=comp.next_server_memory(state.h_server, dhat_mean),
     )
     ghat = layout.unflatten(ghat_flat, cast=False)  # f32, like the per-leaf ref
-
-    v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
-    return v, new_state._replace(v=v)
+    return ghat, new_state

@@ -35,7 +35,7 @@ from repro.compat import shard_map
 
 from repro.configs import get_config, get_shape, input_specs
 from repro.core.compression import CompressionConfig
-from repro.core.diana import DianaState, aggregate_shardmap
+from repro.core.diana import DianaState, aggregate_shardmap, bucket_layout
 from repro.core.vr import VRState, resolve_vr_p
 from repro.models import init_model, train_loss
 from repro.models.sharding import GSPMDPolicy, sharding_policy
@@ -66,13 +66,17 @@ def resolve_bucketed(opt: "DianaOptimizer", mesh, waxes) -> "DianaOptimizer":
     §6).  On such toolchains (no nested-manual support) the step silently
     falls back to the per-leaf layout — bitwise the same results, just more
     collectives.  Pure worker meshes (the paper's data-parallel setting) and
-    nested-manual-capable toolchains keep the bucketed path.
+    nested-manual-capable toolchains keep the bucketed path.  The DOWNLINK
+    flatten (core.diana.downlink_round) builds the same kind of whole-model
+    buffer inside the same partial-manual body, so the downgrade forces its
+    layout per-leaf too.
 
     Resolved HERE (not inside core.diana) because the choice fixes the
     DianaState layout: init and step must agree before the state is built.
     """
     comp = opt.compression
-    if not comp.bucketed:
+    dcfg = comp.down_config()
+    if not comp.bucketed and not (dcfg is not None and dcfg.bucketed):
         return opt
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     inner_live = any(sizes[a] > 1 for a in mesh.axis_names if a not in waxes)
@@ -81,7 +85,8 @@ def resolve_bucketed(opt: "DianaOptimizer", mesh, waxes) -> "DianaOptimizer":
     if inner_live and not supports_nested_manual():
         from dataclasses import replace as _dc_replace
 
-        comp = _dc_replace(comp, bucketed=False)
+        comp = _dc_replace(comp, bucketed=False,
+                           down_bucketed=False if dcfg is not None else None)
         return DianaOptimizer(comp, opt.inner, schedule=opt.schedule,
                               regularizer=opt.regularizer)
     return opt
@@ -99,6 +104,8 @@ def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: floa
         bucketed=cfg.comp_bucketed,
         vr=cfg.vr,
         vr_p=cfg.vr_p,
+        down_method=cfg.comp_down_method,
+        down_k=cfg.comp_down_k,
     )
     inner_opt = adamw() if inner == "adamw" else momentum(beta)
     return DianaOptimizer(comp, inner_opt, schedule=constant_schedule(lr))
@@ -133,6 +140,24 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
             mu=jax.tree_util.tree_map(to_vr, pspecs, is_leaf=vr_leaf),
         )
 
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    # Downlink memory: replicated over the worker axes (server + every worker
+    # evolve the same copy); the flat dim shards like the h_server analogue —
+    # over 'model' when the bucketed downlink buffer divides evenly, per the
+    # leaf's h spec in the per-leaf downlink layout.
+    down_shard = None
+    dcfg = opt.compression.down_config()
+    if dcfg is not None:
+        if dcfg.bucketed:
+            dpd = bucket_layout(dcfg, params_shape).padded_size
+            down_axis = "model" if msize > 1 and dpd % msize == 0 else None
+            down_shard = NamedSharding(mesh, P(down_axis))
+        else:
+            down_shard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), h_flat_specs(pspecs)
+            )
+
     if opt.compression.bucketed:
         # Single flat (n, Dp) / (Dp,) memory buffers: worker dim manual-
         # sharded; the flat dim shards over 'model' when the padded size
@@ -143,15 +168,13 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
         # accept n_workers x Dp replicas; NOT done here because mesh-dependent
         # padding would fork the state layout across meshes and break the
         # bitwise per-leaf contract.
-        from repro.core.diana import bucket_layout
-
         dp = bucket_layout(opt.compression, params_shape).padded_size
-        msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
         flat_axis = "model" if msize > 1 and dp % msize == 0 else None
         diana_shard = DianaState(
             h_worker=NamedSharding(mesh, P(wtuple if waxes else None, flat_axis)),
             h_server=NamedSharding(mesh, P(flat_axis)),
             vr=vr_shard,
+            h_down=down_shard,
         )
     else:
         h_specs = h_flat_specs(pspecs)
@@ -161,6 +184,7 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
             ),
             h_server=jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), h_specs),
             vr=vr_shard,
+            h_down=down_shard,
         )
     # inner optimizer state mirrors params (momentum/adam buffers)
     inner_shard = _inner_shardings(opt_state_shape.inner, p_shard, mesh)
@@ -258,6 +282,15 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
                     vr_force_refresh=opt_state.step == 0,
                 )
 
+            down_kwargs = {}
+            if opt_state.diana.h_down is not None:
+                # Downlink draws are worker-INDEPENDENT (every worker decodes
+                # the same broadcast): fold DOWN_FOLD into the step key
+                # before the worker fold below.
+                from repro.core.diana import DOWN_FOLD
+
+                down_kwargs = dict(down_key=jax.random.fold_in(key, DOWN_FOLD))
+
             wkey = jax.random.fold_in(key, widx[0])
             # Nested fully-manual aggregation where the toolchain supports
             # it; otherwise keep the inner axes auto (GSPMD constraints) —
@@ -276,6 +309,7 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
                 h_specs=h_flat_specs(gspecs) if gspecs is not None else None,
                 mesh=mesh,
                 **vr_kwargs,
+                **down_kwargs,
             )
             if waxes:
                 loss = jax.lax.pmean(loss, waxes)
@@ -305,10 +339,16 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
                 snapshot=jax.tree_util.tree_map(lambda _: P(wtuple), dvr.snapshot),
                 mu=jax.tree_util.tree_map(lambda _: P(wtuple), dvr.mu),
             )
+        down_spec = None
+        if opt_state_shape.diana.h_down is not None:
+            down_spec = jax.tree_util.tree_map(
+                lambda _: rep, opt_state_shape.diana.h_down
+            )
         diana_spec = DianaState(
             h_worker=jax.tree_util.tree_map(lambda _: P(wtuple), opt_state_shape.diana.h_worker),
             h_server=jax.tree_util.tree_map(lambda _: rep, opt_state_shape.diana.h_server),
             vr=vr_spec,
+            h_down=down_spec,
         )
         return DianaOptState(
             step=rep,
@@ -382,6 +422,15 @@ def main(argv=None):
                     choices=[None, *available_methods()])
     ap.add_argument("--comp-k", type=int, default=None,
                     help="kept coordinates for rand-k / top-k compressors")
+    ap.add_argument("--down-method", default=None,
+                    choices=[None, *available_methods()],
+                    help="compress the server->worker broadcast too "
+                         "(bidirectional DIANA): any registry operator, with "
+                         "its own downlink memory h_down; default keeps the "
+                         "broadcast full-precision")
+    ap.add_argument("--down-k", type=int, default=None,
+                    help="kept coordinates for a sparse downlink operator "
+                         "(default: --comp-k)")
     ap.add_argument("--per-leaf-agg", action="store_true",
                     help="disable the bucketed (flat-buffer) aggregation and "
                          "compress/gather/decode each parameter leaf separately")
@@ -412,6 +461,10 @@ def main(argv=None):
         cfg = dc_replace(cfg, compression=args.compression)
     if args.comp_k:
         cfg = dc_replace(cfg, comp_k=args.comp_k)
+    if args.down_method:
+        cfg = dc_replace(cfg, comp_down_method=args.down_method)
+    if args.down_k:
+        cfg = dc_replace(cfg, comp_down_k=args.down_k)
     if args.per_leaf_agg:
         cfg = dc_replace(cfg, comp_bucketed=False)
     shape = get_shape(args.shape)

@@ -1,8 +1,11 @@
 """DianaOptimizer — the paper's full iterate as a composable update rule.
 
-Per step (Algorithm 1; with ``vr`` the VR-DIANA iterate of arXiv:1904.05115):
+Per step (Algorithm 1; with ``vr`` the VR-DIANA iterate of arXiv:1904.05115;
+with ``down_method`` the broadcast is downlink-compressed too — DESIGN.md
+§Bidirectional):
     1. per-worker grads g_i            (caller, inside shard_map)
-    2. ghat, h (+ VR snapshot) updates (core.diana.aggregate_shardmap)
+    2. ghat, h (+ VR snapshot, + downlink h_down) updates
+                                       (core.diana.aggregate_shardmap)
     3. v = inner optimizer on ghat     (momentum beta -> paper's v^k)
     4. x = prox_{gamma R}(x + update)  (core.prox)
 
@@ -43,6 +46,12 @@ class DianaOptimizer:
     ``aggregate_shardmap``'s ``vr_aux`` (launch/train.py does).  ``vr_p``
     overrides the snapshot probability (None keeps the config's value or the
     ``1/m`` default the caller resolves).
+
+    ``down_method`` switches the iterate to BIDIRECTIONAL DIANA: ``init``
+    grows the downlink memory ``h_down`` inside :class:`DianaState` and the
+    training step must feed ``aggregate_shardmap`` a worker-independent
+    ``down_key`` (launch/train.py does).  ``down_k`` overrides the sparse
+    downlink budget (None inherits the config's ``k``).
     """
 
     def __init__(
@@ -54,12 +63,20 @@ class DianaOptimizer:
         lr: float = 1e-3,
         vr: Optional[bool] = None,
         vr_p: Optional[float] = None,
+        down_method: Optional[str] = None,
+        down_k: Optional[int] = None,
     ):
         if vr is not None or vr_p is not None:
             compression = _dc_replace(
                 compression,
                 vr=compression.vr if vr is None else vr,
                 vr_p=compression.vr_p if vr_p is None else vr_p,
+            )
+        if down_method is not None or down_k is not None:
+            compression = _dc_replace(
+                compression,
+                down_method=compression.down_method if down_method is None else down_method,
+                down_k=compression.down_k if down_k is None else down_k,
             )
         self.compression = compression
         self.inner = inner
@@ -75,6 +92,11 @@ class DianaOptimizer:
     def variance_reduced(self) -> bool:
         """Whether this optimizer runs the VR-DIANA iterate."""
         return self.compression.vr
+
+    @property
+    def bidirectional(self) -> bool:
+        """Whether the server broadcast is compressed (downlink configured)."""
+        return self.compression.bidirectional
 
     def init(self, params, n_workers: int) -> DianaOptState:
         return DianaOptState(

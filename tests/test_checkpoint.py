@@ -62,16 +62,17 @@ def test_no_tmp_litter(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# DianaState round-trips: bucketed layout and the VR slot
+# DianaState round-trips: bucketed layout, the VR slot, the downlink memory
 # ---------------------------------------------------------------------------
 
-def _diana_state(bucketed: bool, vr: bool):
+def _diana_state(bucketed: bool, vr: bool, down: bool = False):
     """A populated (non-zero) DianaState in the requested layout."""
     from repro.core import CompressionConfig, init_state
 
     params = {"w": jnp.ones((6, 4), jnp.bfloat16) * 0.5, "b": jnp.zeros((10,))}
     cfg = CompressionConfig(method="diana", block_size=16, bucketed=bucketed,
-                            vr=vr, vr_p=0.25 if vr else None)
+                            vr=vr, vr_p=0.25 if vr else None,
+                            down_method="diana" if down else None)
     st = init_state(params, cfg, 3)
     fill = lambda t: jax.tree_util.tree_map(
         lambda x: (jnp.arange(x.size, dtype=jnp.float32)
@@ -79,6 +80,8 @@ def _diana_state(bucketed: bool, vr: bool):
     st = st._replace(h_worker=fill(st.h_worker), h_server=fill(st.h_server))
     if vr:
         st = st._replace(vr=st.vr._replace(mu=fill(st.vr.mu)))
+    if down:
+        st = st._replace(h_down=fill(st.h_down))
     return st
 
 
@@ -109,3 +112,36 @@ def test_pre_vr_checkpoint_into_vr_template_hints(tmp_path):
     save_checkpoint(str(tmp_path), 0, {"diana": _diana_state(True, False)})
     with pytest.raises(KeyError, match="vr"):
         restore_checkpoint(str(tmp_path), {"diana": _diana_state(True, True)})
+
+
+@pytest.mark.parametrize("bucketed", [False, True], ids=["perleaf", "bucketed"])
+def test_downlink_state_roundtrip(tmp_path, bucketed):
+    """The downlink memory h_down round-trips exactly in both layouts, and a
+    downlink-off checkpoint carries no h_down keys at all (byte-identity of
+    uplink-only checkpoints to pre-downlink ones)."""
+    st = _diana_state(bucketed, vr=False, down=True)
+    save_checkpoint(str(tmp_path), 4, {"diana": st})
+    restored, step = restore_checkpoint(str(tmp_path), {"diana": st})
+    assert step == 4
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    import json
+    with open(os.path.join(tmp_path, "manifest.json")) as f:
+        keys = json.load(f)["keys"]
+    assert any("h_down" in k.split("/") for k in keys)
+    save_checkpoint(str(tmp_path), 5, {"diana": _diana_state(bucketed, False)})
+    with open(os.path.join(tmp_path, "manifest.json")) as f:
+        keys_off = json.load(f)["keys"]
+    assert not any("h_down" in k.split("/") for k in keys_off)
+
+
+def test_pre_downlink_checkpoint_into_downlink_template_hints(tmp_path):
+    """Restoring a downlink-off checkpoint into a bidirectional template
+    fails with a KeyError naming the missing h_down memory."""
+    save_checkpoint(str(tmp_path), 0, {"diana": _diana_state(True, False)})
+    with pytest.raises(KeyError, match="h_down"):
+        restore_checkpoint(str(tmp_path),
+                           {"diana": _diana_state(True, False, down=True)})

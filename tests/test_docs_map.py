@@ -1,0 +1,60 @@
+"""Tier-1 enforcement of the documentation map (tools/check_docs.py).
+
+Runs the same two checks the CI step runs, in-process, so a PR that renames a
+symbol cited by docs/paper_map.md or deletes a DESIGN.md section that module
+docstrings cite fails locally too — the reproduction's claim-by-claim audit
+trail can never silently rot.
+"""
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_design_citations_resolve():
+    errors = check_docs.check_design_citations(REPO)
+    assert not errors, "\n".join(errors)
+
+
+def test_paper_map_references_resolve():
+    errors = check_docs.check_paper_map(REPO)
+    assert not errors, "\n".join(errors)
+
+
+def test_paper_map_covers_required_claims():
+    """The acceptance surface: Lemmas 1-2, Theorem 1 and Algorithm 1 are all
+    mapped (by name) in docs/paper_map.md."""
+    with open(os.path.join(REPO, "docs", "paper_map.md")) as f:
+        text = f.read()
+    for claim in ("Lemma 1", "Lemma 2", "Theorem 1", "Algorithm 1", "VR-DIANA"):
+        assert claim in text, f"paper_map.md must cover {claim!r}"
+
+
+def test_linter_catches_bad_reference(tmp_path):
+    """The linter is not vacuous: a fabricated bad citation and a bad symbol
+    reference are both flagged."""
+    repo = tmp_path
+    (repo / "DESIGN.md").write_text("## §1 Real\n")
+    (repo / "docs").mkdir()
+    (repo / "docs" / "paper_map.md").write_text(
+        "see `src/repro/core/quantization.py::no_such_symbol`\n"
+        "and `missing/dir/`\n")
+    # built at runtime so the real-repo scan never sees this bad citation
+    bad_cite = '"""cites ' + "DESIGN" + ".md §7" + '."""\n'
+    (repo / "mod.py").write_text(bad_cite)
+    errs = check_docs.check_design_citations(str(repo))
+    assert len(errs) == 1 and "§7" in errs[0]
+    # the src/ import check runs against the real repo's sys.path
+    (repo / "src").mkdir()
+    import shutil
+
+    shutil.copytree(os.path.join(REPO, "src", "repro"),
+                    repo / "src" / "repro",
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    errs = check_docs.check_paper_map(str(repo))
+    assert any("no_such_symbol" in e for e in errs)
+    assert any("missing/dir/" in e for e in errs)

@@ -1,0 +1,379 @@
+"""Bidirectional DIANA — the compressed server broadcast (DESIGN.md
+§Bidirectional).
+
+Contracts under test:
+
+* layout invariance: the downlink round is bitwise-identical across the
+  per-leaf and bucketed downlink layouts, for every registry operator,
+  including the mixed (uplink layout != downlink layout) pairings;
+* the identity downlink is an exact no-op (an uplink-only run with an inert
+  ``h_down`` slot);
+* disabled downlink keeps the state tree free of ``h_down`` leaves — states
+  and checkpoints are byte-identical to uplink-only DIANA;
+* the downlink PRNG fold never perturbs the uplink draws;
+* convergence law: the downlink MEMORY is what makes broadcast compression
+  safe — bidirectional DIANA still reaches the exact optimum, while a
+  memoryless downlink quantizer stalls at its broadcast-noise floor;
+* acceptance: ``aggregate_shardmap == reference_step`` BITWISE on a real
+  4-worker mesh for all five registry operators (paired uplink x downlink),
+  in per-leaf and bucketed layouts, VR on and off (subprocess, like
+  tests/test_distributed.py).
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig, reference_init, reference_step
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KEY = jax.random.PRNGKey(7)
+
+# the five canonical registry operators (every alias resolves to one of these)
+OPERATORS = [
+    ("diana", dict(block_size=16)),
+    ("natural", {}),
+    ("randk", dict(k=8)),
+    ("topk_ef", dict(k=8)),
+    ("none", {}),
+]
+
+
+def _grid(key, shape, scale=64):
+    """1/64-grid values: small partial sums are exact in f32, so bitwise
+    equality is meaningful even through identity's pmean path."""
+    return jnp.round(jax.random.normal(key, shape) * scale) / scale
+
+
+def _fixture(n=4, key=KEY):
+    params = {"w": _grid(jax.random.fold_in(key, 0), (12, 5)),
+              "b": _grid(jax.random.fold_in(key, 1), (9,))}
+    grads = {
+        k: _grid(jax.random.fold_in(key, 10 + i), (n,) + v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    return params, grads
+
+
+def _run(cfg, n=4, key=KEY, steps=1):
+    params, grads = _fixture(n, key)
+    state = reference_init(params, cfg, n)
+    v = None
+    for t in range(steps):
+        v, state = reference_step(grads, state, jax.random.fold_in(key, t), cfg)
+    return v, state
+
+
+# ---------------------------------------------------------------------------
+# Layout invariance of the downlink round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("down,kw", OPERATORS, ids=[m for m, _ in OPERATORS])
+def test_downlink_bucketed_bitwise_equals_perleaf(down, kw):
+    """Per-leaf and bucketed DOWNLINK layouts agree bitwise for every
+    operator (the downlink re-derives the per-leaf key schedule exactly as
+    the uplink bucketed hooks do), including the h_down memory rows."""
+    from dataclasses import replace
+
+    from repro.core.diana import bucket_layout
+
+    cfg = CompressionConfig(method="diana", p=math.inf, block_size=16, k=8,
+                            down_method=down, down_k=kw.get("k"))
+    v_pl, ns_pl = _run(cfg, steps=2)
+    v_bk, ns_bk = _run(replace(cfg, bucketed=True), steps=2)
+    for a, b in zip(jax.tree_util.tree_leaves(v_pl), jax.tree_util.tree_leaves(v_bk)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # per-leaf h_down rows live inside the bucketed h_down at the downlink
+    # layout's offsets
+    params, _ = _fixture()
+    lay = bucket_layout(replace(cfg.down_config(), bucketed=True), params)
+    pl_leaves = jax.tree_util.tree_leaves(ns_pl.h_down)
+    for i, (off, size) in enumerate(zip(lay.offsets, lay.sizes)):
+        np.testing.assert_array_equal(
+            np.asarray(ns_bk.h_down[off:off + size]), np.asarray(pl_leaves[i]))
+
+
+@pytest.mark.parametrize("up_bucketed,down_bucketed", [(True, False), (False, True)],
+                         ids=["bucketed-up/perleaf-down", "perleaf-up/bucketed-down"])
+def test_mixed_layout_pairings_bitwise(up_bucketed, down_bucketed):
+    """The downlink makes its OWN layout decision (``down_bucketed``): mixed
+    uplink/downlink layout pairings produce the same bits as the pure ones."""
+    base = CompressionConfig(method="diana", p=math.inf, block_size=16,
+                             down_method="diana")
+    from dataclasses import replace
+
+    v_ref, ns_ref = _run(base, steps=2)  # pure per-leaf
+    mixed = replace(base, bucketed=up_bucketed, down_bucketed=down_bucketed)
+    v_mx, ns_mx = _run(mixed, steps=2)
+    for a, b in zip(jax.tree_util.tree_leaves(v_ref), jax.tree_util.tree_leaves(v_mx)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_identity_downlink_is_exact_noop():
+    """``down_method='none'`` adds an inert h_down slot but cannot change a
+    single bit of the trajectory (f32 round-trips exactly)."""
+    from dataclasses import replace
+
+    cfg = CompressionConfig(method="diana", p=math.inf, block_size=16)
+    v0, ns0 = _run(cfg, steps=3)
+    v1, ns1 = _run(replace(cfg, down_method="none"), steps=3)
+    for a, b in zip(jax.tree_util.tree_leaves(v0), jax.tree_util.tree_leaves(v1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ns0.h_down is None
+    assert all(float(jnp.abs(l).max()) == 0.0
+               for l in jax.tree_util.tree_leaves(ns1.h_down))
+
+
+def test_downlink_fold_does_not_perturb_uplink_draws():
+    """PRNG schedule contract: enabling a downlink changes ghat (it is
+    compressed now) but the UPLINK h memories — a pure function of the
+    uplink draws — stay bitwise-identical, so DOWN_FOLD is disjoint from the
+    compression schedule."""
+    from dataclasses import replace
+
+    cfg = CompressionConfig(method="diana", p=math.inf, block_size=16)
+    _, ns0 = _run(cfg)
+    _, ns1 = _run(replace(cfg, down_method="diana"))
+    for a, b in zip(jax.tree_util.tree_leaves(ns0.h_worker),
+                    jax.tree_util.tree_leaves(ns1.h_worker)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(ns0.h_server),
+                    jax.tree_util.tree_leaves(ns1.h_server)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_disabled_downlink_state_has_no_h_down_leaves():
+    """``down_method=None`` flattens the slot away: the state pytree carries
+    exactly the uplink-only leaves (pre-PR byte-identity; the checkpoint-key
+    twin of this test lives in tests/test_checkpoint.py)."""
+    from repro.core import init_state
+
+    params, _ = _fixture()
+    cfg = CompressionConfig(method="diana", block_size=16)
+    st = init_state(params, cfg, 4)
+    assert st.h_down is None
+    paths = ["/".join(str(getattr(p, "name", getattr(p, "key", p))) for p in kp)
+             for kp, _ in jax.tree_util.tree_flatten_with_path(st)[0]]
+    assert not any("h_down" in p for p in paths)
+    assert not any("vr" in p.split("/") for p in paths)
+
+
+def test_bf16_gradients_downlink_matches_f32_reference_bitwise():
+    """The downlink compresses the f32 server direction — NOT a ghat already
+    rounded to the gradient dtype — so a bf16-gradient distributed run stays
+    bitwise-aligned with the f32 reference fed the exact same values (the
+    gradient-dtype cast happens once, after the downlink).  Regression test:
+    an earlier ordering cast ghat to bf16 before the downlink encode, which
+    silently forked h_down between the paths."""
+    from repro.core import DianaState, aggregate_shardmap, init_state
+    from repro.core.diana import DOWN_FOLD
+
+    key = KEY
+    # 1/8-grid values with small magnitude: exactly representable in bf16,
+    # so the bf16 local gradients upcast to the identical f32 values the
+    # reference consumes.
+    g16 = {
+        "w": (_grid(jax.random.fold_in(key, 0), (12, 5), scale=8) / 4).astype(jnp.bfloat16),
+        "b": (_grid(jax.random.fold_in(key, 1), (9,), scale=8) / 4).astype(jnp.bfloat16),
+    }
+    params = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), g16)
+    g32 = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32)[None], g16  # stacked, n=1
+    )
+    cfg = CompressionConfig(method="diana", p=math.inf, block_size=16,
+                            down_method="diana")
+    v_ref, ref_new = reference_step(g32, reference_init(params, cfg, 1), key, cfg)
+
+    st = init_state(params, cfg, 1)
+    ghat, ns = aggregate_shardmap(
+        g16, st, jax.random.fold_in(key, 0), cfg,
+        axis_names=(), n_workers=1,
+        down_key=jax.random.fold_in(key, DOWN_FOLD))
+
+    for a, b in zip(jax.tree_util.tree_leaves(ns.h_down),
+                    jax.tree_util.tree_leaves(ref_new.h_down)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(ghat),
+                    jax.tree_util.tree_leaves(v_ref)):
+        assert a.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b.astype(jnp.bfloat16), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Convergence law: downlink memory vs memoryless downlink
+# ---------------------------------------------------------------------------
+
+def _quadratic(n_workers=4, d=64, seed=0):
+    rng = np.random.default_rng(seed)
+    As = rng.standard_normal((n_workers, d, d)) / math.sqrt(d)
+    As += np.eye(d) * 0.8
+    bs = rng.standard_normal((n_workers, d))
+    x_star = np.linalg.lstsq(np.concatenate(As, 0), np.concatenate(bs, 0),
+                             rcond=None)[0]
+    As, bs = jnp.asarray(As), jnp.asarray(bs)
+
+    def grads(x):
+        return jnp.einsum("wij,wjk->wik", jnp.swapaxes(As, 1, 2),
+                          (jnp.einsum("wij,j->wi", As, x) - bs)[..., None])[..., 0]
+
+    return grads, jnp.asarray(x_star)
+
+
+def _run_quadratic(cfg, steps=500, gamma=0.3, d=64):
+    grads_fn, x_star = _quadratic(d=d)
+
+    @jax.jit
+    def step(params, state, key):
+        v, state = reference_step({"x": grads_fn(params["x"])}, state, key, cfg)
+        return {"x": params["x"] - gamma * v["x"]}, state
+
+    params = {"x": jnp.zeros((d,))}
+    state = reference_init(params, cfg, 4)
+    key = KEY
+    for t in range(steps):
+        key = jax.random.fold_in(key, t)
+        params, state = step(params, state, key)
+    return float(jnp.linalg.norm(params["x"] - x_star))
+
+
+def test_bidirectional_diana_reaches_exact_optimum():
+    """The downlink memory makes broadcast compression noise VANISH near the
+    optimum (the same gradient-difference argument as uplink DIANA), so
+    bidirectional DIANA still converges to the exact optimum; a memoryless
+    downlink quantizer (``down_method='qsgd'``) keeps re-injecting broadcast
+    noise and stalls, exactly like memoryless uplink QSGD does."""
+    bi = _run_quadratic(CompressionConfig(
+        method="diana", p=math.inf, block_size=16, down_method="diana"))
+    memoryless = _run_quadratic(CompressionConfig(
+        method="diana", p=math.inf, block_size=16, down_method="qsgd"))
+    assert bi < 1e-3, f"bidirectional DIANA should reach the optimum, got {bi}"
+    assert memoryless > 10 * bi, (
+        f"memoryless downlink should stall: down-qsgd={memoryless:.2e} "
+        f"down-diana={bi:.2e}")
+
+
+def test_downlink_ef_converges():
+    """Error feedback is safe on the deterministic server direction: top-k EF
+    downlink (with its residual in h_down) also reaches the exact optimum."""
+    dist = _run_quadratic(CompressionConfig(
+        method="diana", p=math.inf, block_size=16,
+        down_method="topk_ef", down_k=16), steps=800, gamma=0.2)
+    assert dist < 1e-2, f"EF downlink should converge, got {dist}"
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: distributed == reference bitwise, 4-worker mesh
+# ---------------------------------------------------------------------------
+
+def run_py(code: str, timeout=900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("vr", [False, True], ids=["plain", "vr"])
+def test_downlink_distributed_bitwise_all_operators(vr):
+    """Acceptance: with a downlink compressor enabled, ``aggregate_shardmap``
+    over a real 4-worker mesh equals ``reference_step`` BITWISE — ghat, the
+    uplink h state and the downlink h_down — for all five registry operators
+    (paired as uplink AND downlink), in the per-leaf and bucketed layouts,
+    with VR off and on (one subprocess per VR mode)."""
+    code = f"""
+import jax, jax.numpy as jnp, numpy as np, json, math
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import (CompressionConfig, DianaState, VRState,
+                        aggregate_shardmap, init_state)
+from repro.core.diana import DOWN_FOLD, reference_init, reference_step
+from repro.launch.mesh import make_mesh
+from tests.test_downlink import OPERATORS
+from tests.test_convergence_laws import _vr_fixture
+
+VR = {vr!r}
+mesh = make_mesh((4, 1), ("data", "model"))
+n = 4
+key = jax.random.PRNGKey(7)
+tmap, leaves = jax.tree_util.tree_map, jax.tree_util.tree_leaves
+params, grads, snap, mu, g_snap, mu_cand = _vr_fixture(n, key)
+
+report = {{}}
+for method, kw in OPERATORS:
+    for bucketed in (False, True):
+        cfg = CompressionConfig(
+            method=method, p=math.inf, bucketed=bucketed,
+            down_method=method, down_k=kw.get("k"),
+            vr=VR, vr_p=0.5 if VR else None,
+            **{{k: v for k, v in kw.items() if k != "k"}}, k=kw.get("k", 64))
+
+        ref_state = reference_init(params, cfg, n)
+        st = init_state(params, cfg, n)
+        vr_kwargs = {{}}
+        if VR:
+            ref_state = ref_state._replace(
+                vr=ref_state.vr._replace(snapshot=snap, mu=mu))
+            st = st._replace(vr=st.vr._replace(snapshot=snap, mu=mu))
+            vr_kwargs = dict(vr_aux=(g_snap, mu_cand), params=params)
+        v_ref, ref_new = reference_step(grads, ref_state, key, cfg, **vr_kwargs)
+
+        def body(g_st, snap_st, mu_st, gsnap_st, mucand_st, h_w, h_s, h_d, k):
+            own = lambda t: tmap(lambda x: x[0], t)
+            vr_st = VRState(snapshot=snap_st, mu=mu_st) if VR else None
+            stl = DianaState(h_w, h_s, vr_st, h_d)
+            wkey = jax.random.fold_in(k, jax.lax.axis_index("data"))
+            kw2 = dict(vr_aux=(own(gsnap_st), own(mucand_st)),
+                       params_local=params) if VR else {{}}
+            ghat, ns = aggregate_shardmap(
+                own(g_st), stl, wkey, cfg, axis_names=("data",), n_workers=n,
+                down_key=jax.random.fold_in(k, DOWN_FOLD), **kw2)
+            nsnap = ns.vr.snapshot if VR else snap_st
+            nmu = ns.vr.mu if VR else mu_st
+            return ghat, ns.h_worker, ns.h_server, ns.h_down, nsnap, nmu
+
+        sh = lambda t: tmap(lambda _: P("data"), t)
+        rep = lambda t: tmap(lambda _: P(), t)
+        hd_spec = tmap(lambda _: P(), st.h_down)
+        fn = shard_map(body, mesh=mesh,
+            in_specs=(sh(grads), sh(snap), sh(mu), sh(g_snap), sh(mu_cand),
+                      tmap(lambda _: P("data"), st.h_worker),
+                      rep(st.h_server), hd_spec, P()),
+            out_specs=(rep(params), tmap(lambda _: P("data"), st.h_worker),
+                       rep(st.h_server), hd_spec, sh(snap), sh(mu)),
+            axis_names={{"data"}}, check_vma=False)
+        ghat, h_w, h_s, h_d, nsnap, nmu = jax.jit(fn)(
+            grads, snap, mu, g_snap, mu_cand,
+            st.h_worker, st.h_server, st.h_down, key)
+
+        errs = {{
+            "g": max(float(jnp.abs(a - b).max()) for a, b in
+                     zip(leaves(ghat), leaves(v_ref))),
+            "hw": max(float(jnp.abs(a - b).max()) for a, b in
+                      zip(leaves(h_w), leaves(ref_new.h_worker))),
+            "hs": max(float(jnp.abs(a - b).max()) for a, b in
+                      zip(leaves(h_s), leaves(ref_new.h_server))),
+            "hd": max(float(jnp.abs(a - b).max()) for a, b in
+                      zip(leaves(h_d), leaves(ref_new.h_down))),
+        }}
+        if VR:
+            errs["snap"] = max(float(jnp.abs(a - b).max()) for a, b in
+                               zip(leaves(nsnap), leaves(ref_new.vr.snapshot)))
+            errs["mu"] = max(float(jnp.abs(a - b).max()) for a, b in
+                             zip(leaves(nmu), leaves(ref_new.vr.mu)))
+        report[f"{{method}}/{{'bucketed' if bucketed else 'perleaf'}}"] = errs
+print(json.dumps(report))
+"""
+    report = json.loads(run_py(code).strip().splitlines()[-1])
+    assert len(report) == 2 * len(OPERATORS)
+    for pairing, errs in report.items():
+        assert all(v == 0.0 for v in errs.values()), (pairing, errs)

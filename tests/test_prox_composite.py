@@ -1,0 +1,141 @@
+"""Composite-objective (non-smooth R) path of DIANA — dedicated tier-1 suite.
+
+The paper's iterate is ``x^{k+1} = prox_{gamma R}(x^k - gamma v^k)`` for an
+arbitrary proper closed convex ``R`` (Algorithm 1 line 9) — the capability
+QSGD/TernGrad lack.  `tests/test_prox.py` checks the closed-form operators in
+isolation; this file checks the COMPOSITE path end to end:
+
+* the optimizer-level wiring: ``DianaOptimizer.apply_direction`` actually
+  applies ``prox_{lr R}`` after the inner update, with ``gamma = lr``;
+* composite convergence: l1-regularized logistic regression under DIANA
+  reaches the composite optimum ``f(x) + R(x)`` (not the smooth-only one) and
+  produces genuinely sparse iterates;
+* composite convergence survives a compressed downlink (the bidirectional
+  iterate still supports prox — DESIGN.md §Bidirectional);
+* indicator regularizers: the DIANA trajectory NEVER leaves the constraint
+  set (the projection runs every step, not only at the end).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig, reference_init, reference_step
+from repro.core.prox import box_indicator, l1
+from repro.optim import DianaOptimizer, momentum
+from repro.optim.diana_optimizer import DianaOptState
+
+KEY = jax.random.PRNGKey(11)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-level wiring of the prox step
+# ---------------------------------------------------------------------------
+
+def test_apply_direction_applies_prox_with_gamma_eq_lr():
+    """``apply_direction`` == inner update followed by ``prox_{lr R}`` — the
+    paper's coupling of the prox scale to the stepsize, on the real
+    optimizer path (not the hand-rolled benchmark loops)."""
+    lam, lr = 0.3, 0.1
+    reg = l1(lam)
+    opt = DianaOptimizer(CompressionConfig(method="diana", block_size=16),
+                         momentum(0.9), regularizer=reg, lr=lr)
+    params = {"x": jnp.asarray([0.5, -0.02, 0.011, -2.0])}
+    state = opt.init(params, n_workers=2)
+    ghat = {"x": jnp.asarray([1.0, -0.5, 0.25, 0.125])}
+    new_params, new_state = opt.apply_direction(params, ghat, state, state.diana)
+
+    want = reg.tree_prox({"x": params["x"] - lr * ghat["x"]}, lr)
+    np.testing.assert_allclose(np.asarray(new_params["x"]),
+                               np.asarray(want["x"]), rtol=1e-6, atol=1e-7)
+    assert int(new_state.step) == 1
+
+
+def test_apply_direction_without_regularizer_is_plain_update():
+    opt = DianaOptimizer(CompressionConfig(method="diana", block_size=16),
+                         momentum(0.0), lr=0.5)
+    params = {"x": jnp.asarray([1.0, -1.0])}
+    state = opt.init(params, n_workers=2)
+    ghat = {"x": jnp.asarray([0.5, 0.5])}
+    new_params, _ = opt.apply_direction(params, ghat, state, state.diana)
+    np.testing.assert_allclose(np.asarray(new_params["x"]), [0.75, -1.25],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Composite convergence: l1-regularized logistic regression under DIANA
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def composite_runs():
+    """One shared sweep of the composite problem (module-scoped: the
+    assertions are cross-run comparisons of the same trajectory family)."""
+    from benchmarks.common import fstar_logreg, run_logreg, stoch_problem
+
+    prob = stoch_problem()
+    lam = 0.01
+    fstar = fstar_logreg(prob, 800, l1=lam)
+    runs = {
+        "diana": run_logreg("diana", math.inf, steps=400, gamma=1.0, block=8,
+                            l1=lam, problem=prob),
+        "bidirectional": run_logreg("diana", math.inf, steps=400, gamma=1.0,
+                                    block=8, l1=lam, problem=prob,
+                                    down_method="diana"),
+    }
+    return fstar, lam, runs
+
+
+def test_composite_gap_vanishes_under_diana(composite_runs):
+    """DIANA + prox drives the COMPOSITE objective f + lam*||x||_1 to its
+    optimum — the quantization noise of the differences vanishes, so the
+    prox fixed point is exact (the claim QSGD's non-vanishing noise breaks)."""
+    fstar, _, runs = composite_runs
+    assert runs["diana"]["final_loss"] - fstar < 1e-4, (
+        runs["diana"]["final_loss"], fstar)
+
+
+def test_composite_iterates_are_sparse(composite_runs):
+    """Soft-thresholding every step yields EXACT zeros in the iterate — the
+    hallmark of a real prox path (plain subgradient steps only shrink)."""
+    _, _, runs = composite_runs
+    x = np.asarray(runs["diana"]["x"])
+    assert (x == 0.0).sum() > 0, "l1 prox should zero out some coordinates"
+
+
+def test_composite_survives_compressed_downlink(composite_runs):
+    """Bidirectional DIANA (compressed broadcast with downlink memory) keeps
+    the composite path intact: same optimum, within noise of uplink-only."""
+    fstar, _, runs = composite_runs
+    assert runs["bidirectional"]["final_loss"] - fstar < 1e-4, (
+        runs["bidirectional"]["final_loss"], fstar)
+
+
+def test_box_constraint_never_violated_along_trajectory():
+    """Indicator-of-box R: every iterate of the DIANA trajectory stays inside
+    [lo, hi]^d — the projection is part of the step, not a post-hoc clamp."""
+    lo, hi = -0.25, 0.25
+    reg = box_indicator(lo, hi)
+    rng = np.random.default_rng(2)
+    n, d = 4, 16
+    A = jnp.asarray(rng.standard_normal((n, 24, d)))
+    # unconstrained solution far outside the box, so the constraint binds
+    x_true = jnp.asarray(rng.standard_normal(d) * 2.0)
+    y = jnp.einsum("wij,j->wi", A, x_true)
+
+    cfg = CompressionConfig(method="diana", p=math.inf, block_size=16)
+    params = {"x": jnp.zeros((d,))}
+    state = reference_init(params, cfg, n)
+    key, gamma = KEY, 0.05
+    for t in range(80):
+        key = jax.random.fold_in(key, t)
+        resid = jnp.einsum("wij,j->wi", A, params["x"]) - y
+        g = {"x": jnp.einsum("wij,wi->wj", A, resid) / A.shape[1]}
+        v, state = reference_step(g, state, key, cfg)
+        params = reg.tree_prox({"x": params["x"] - gamma * v["x"]}, gamma)
+        x = np.asarray(params["x"])
+        assert x.min() >= lo - 1e-7 and x.max() <= hi + 1e-7, (t, x.min(), x.max())
+    # the constraint is active at the solution (the problem actually binds)
+    assert np.isclose(np.abs(np.asarray(params["x"])).max(), hi, atol=1e-3)

@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Docs linter: DESIGN.md section citations + docs/paper_map.md references.
+
+Two fast checks, run as a CI step (and as a tier-1 test via
+tests/test_docs_map.py), so the documentation map can never silently rot:
+
+1. **DESIGN.md citations** — every ``DESIGN.md §<id>`` string anywhere in the
+   repo's Python sources resolves to an actual ``## §<id>`` heading in
+   DESIGN.md (sections are cited by the first whitespace-delimited token of
+   their heading: ``## §Perf notes`` is citable as ``§Perf``).
+
+2. **paper_map references** — every backticked code reference in
+   ``docs/paper_map.md`` resolves:
+
+   * ``path/to/file.py::symbol`` — the file exists; for files under ``src/``
+     the module IMPORTS and ``symbol`` (dotted attributes allowed) resolves
+     via ``getattr``; for tests/benchmarks the symbol is located textually
+     (``def``/``class``) so the linter never triggers test-collection side
+     effects.
+   * ``path/to/file.py`` or ``path/`` — the path exists.
+
+Exit code 0 = clean; 1 = any unresolved citation/reference, each printed as
+``file:line: message``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# \s+ spans newlines: citations wrapped across docstring lines still match
+CITE_RE = re.compile(r"DESIGN\.md\s+§([A-Za-z0-9_-]+)")
+HEADING_RE = re.compile(r"^##\s+§(\S+)", re.M)
+# backticked code refs in the paper map: `a/b.py::symbol`, `a/b.py`, `a/b/`
+REF_RE = re.compile(r"`([\w./-]+?\.py)(?:::([\w.]+))?`|`([\w./-]+/)`")
+
+
+def design_sections(design_path: str) -> set:
+    with open(design_path) as f:
+        return set(HEADING_RE.findall(f.read()))
+
+
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules",
+              "venv", ".venv", "env", ".env", "site-packages", ".tox",
+              ".eggs", "build", "dist"}
+
+
+def iter_py_files(root: str):
+    for base, dirs, files in os.walk(root):
+        dirs[:] = [d for d in dirs if d not in _SKIP_DIRS]
+        for f in files:
+            if f.endswith(".py"):
+                yield os.path.join(base, f)
+
+
+def check_design_citations(repo: str) -> list:
+    """Every 'DESIGN.md section' citation in a Python source resolves."""
+    errors = []
+    sections = design_sections(os.path.join(repo, "DESIGN.md"))
+    for path in iter_py_files(repo):
+        rel = os.path.relpath(path, repo)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # whole-text match, not per-line: citations wrap across docstring
+        # line breaks ("DESIGN.md\n§Bidirectional")
+        for m in CITE_RE.finditer(text):
+            sec = m.group(1)
+            if sec not in sections:
+                lineno = text.count("\n", 0, m.start()) + 1
+                errors.append(
+                    f"{rel}:{lineno}: cites DESIGN.md §{sec} but "
+                    f"DESIGN.md has no '## §{sec}' heading "
+                    f"(have: {', '.join(sorted(sections))})")
+    return errors
+
+
+def _symbol_in_source(path: str, symbol: str) -> bool:
+    """Textual def/class lookup (used for tests/ and benchmarks/ so the
+    linter never imports test modules)."""
+    top = symbol.split(".")[0]
+    pat = re.compile(rf"^\s*(?:def|class)\s+{re.escape(top)}\b", re.M)
+    with open(path, encoding="utf-8") as f:
+        return bool(pat.search(f.read()))
+
+
+def _resolve_import(relpath: str, symbol: str):
+    """Import a src/ module and getattr the (possibly dotted) symbol."""
+    mod_rel = os.path.splitext(relpath)[0]
+    parts = mod_rel.split(os.sep)
+    if parts[0] == "src":
+        parts = parts[1:]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    mod = importlib.import_module(".".join(parts))
+    obj = mod
+    for attr in symbol.split("."):
+        obj = getattr(obj, attr)
+    return obj
+
+
+def check_paper_map(repo: str, map_path: str = "docs/paper_map.md") -> list:
+    """Every backticked file/symbol reference in the paper map resolves."""
+    errors = []
+    full = os.path.join(repo, map_path)
+    if not os.path.exists(full):
+        return [f"{map_path}: file not found"]
+    sys.path.insert(0, os.path.join(repo, "src"))
+    try:
+        with open(full, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for fpath, symbol, dirpath in REF_RE.findall(line):
+                    target = fpath or dirpath
+                    where = f"{map_path}:{lineno}"
+                    if not os.path.exists(os.path.join(repo, target)):
+                        errors.append(f"{where}: path {target!r} does not exist")
+                        continue
+                    if not symbol:
+                        continue
+                    if fpath.startswith("src" + os.sep) or fpath.startswith("src/"):
+                        try:
+                            _resolve_import(fpath, symbol)
+                        except Exception as e:  # import or attribute error
+                            errors.append(
+                                f"{where}: {fpath}::{symbol} does not "
+                                f"import/resolve ({type(e).__name__}: {e})")
+                    elif not _symbol_in_source(os.path.join(repo, fpath), symbol):
+                        errors.append(
+                            f"{where}: no def/class {symbol.split('.')[0]!r} "
+                            f"in {fpath}")
+    finally:
+        sys.path.pop(0)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--repo", default=REPO)
+    args = ap.parse_args(argv)
+    errors = check_design_citations(args.repo) + check_paper_map(args.repo)
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"check_docs: {len(errors)} unresolved reference(s)", file=sys.stderr)
+        return 1
+    print("check_docs: all DESIGN.md citations and paper_map references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
