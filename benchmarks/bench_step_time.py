@@ -37,7 +37,15 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import CompressionConfig, reference_init, reference_step
+from repro.core import (
+    ChannelSpec,
+    CompressionConfig,
+    CompressionPolicy,
+    Rule,
+    policy_bits_per_dim,
+    reference_init,
+    reference_step,
+)
 from repro.core.diana import DianaState, aggregate_shardmap, bucket_layout, init_state
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -67,7 +75,8 @@ SIZES_SMOKE = {
     "small": SIZES["small"],
 }
 
-# (row label, registry method, CompressionConfig kwargs)
+# (row label, registry method, CompressionConfig kwargs); method=None rows
+# run the MIXED policy built by _mixed_policy instead of a flat config
 OPERATORS = [
     ("diana", "diana", dict(block_size=256, p=math.inf)),
     ("natural", "natural", {}),
@@ -75,7 +84,23 @@ OPERATORS = [
     # bidirectional: compressed broadcast with downlink memory
     ("diana+down", "diana", dict(block_size=256, p=math.inf,
                                  down_method="diana")),
+    # grouped CompressionPolicy: exact biases + top-k embedding + ternary
+    # dense in ONE aggregation step (DESIGN.md §Policy) — the per-group
+    # collective count is what the grouped-bucketed layout is for
+    ("policy-mix", None, {}),
 ]
+
+
+def _mixed_policy(bucketed: bool) -> CompressionPolicy:
+    return CompressionPolicy(
+        rules=(
+            Rule(r"\.b$", ChannelSpec(method="identity")),
+            Rule("^emb$", ChannelSpec(method="topk_ef", k=32)),
+            Rule(".*", ChannelSpec(method="diana", block_size=256)),
+        ),
+        bucketed=bucketed,
+        worker_axes=("data",),
+    )
 
 
 def _params(spec):
@@ -167,20 +192,31 @@ def collect(smoke: bool = False):
             for path, setup in PATHS.items():
                 cells = {}
                 for layout in ("perleaf", "bucketed"):
-                    cfg = CompressionConfig(method=method, bucketed=(layout == "bucketed"), **kw)
+                    if method is None:
+                        cfg = _mixed_policy(bucketed=(layout == "bucketed"))
+                    else:
+                        cfg = CompressionConfig(method=method,
+                                                bucketed=(layout == "bucketed"), **kw)
                     made = setup(params, cfg, key)
                     if made is not None:
                         cells[layout] = made
                 if not cells:
                     continue
                 cell = _timeit_interleaved(cells, reps)
-                cfg_b = CompressionConfig(method=method, bucketed=True, **kw)
-                lay = bucket_layout(cfg_b, params)
-                up_bits, down_bits = _direction_bits(cfg_b, params, lay)
+                if method is None:
+                    pol = _mixed_policy(bucketed=True)
+                    n_params = sum(int(v.size) for v in params.values())
+                    n_leaves = len(params)
+                    up_bits, down_bits = policy_bits_per_dim(pol, params), 32.0
+                else:
+                    cfg_b = CompressionConfig(method=method, bucketed=True, **kw)
+                    lay = bucket_layout(cfg_b, params)
+                    n_params, n_leaves = lay.size, lay.n_leaves
+                    up_bits, down_bits = _direction_bits(cfg_b, params, lay)
                 rows.append({
                     "size": size_name,
-                    "n_params": lay.size,
-                    "n_leaves": lay.n_leaves,
+                    "n_params": n_params,
+                    "n_leaves": n_leaves,
                     "operator": label,
                     "path": path,
                     "us_perleaf": cell.get("perleaf"),

@@ -1,8 +1,10 @@
 """Quickstart: DIANA in 60 seconds on one CPU.
 
 Builds a reduced llama3.2-1b, trains a few steps with compressed gradient
-differences on a (data=ndev, model=1) mesh, and prints the losses plus the
-communication savings of the 2-bit payload.
+differences on a (data=ndev, model=1) mesh using the model's curated
+per-parameter-group COMPRESSION POLICY (norms/biases exact, embeddings top-k
+with error feedback, the dense bulk ternary — DESIGN.md §Policy), and prints
+the losses plus the per-group operators and the size-weighted wire cost.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +15,7 @@ from jax.sharding import NamedSharding
 
 from repro.configs import get_config, reduced
 from repro.configs.base import ShapeConfig
-from repro.core.compression import payload_bits_per_dim
+from repro.core import partition_for, policy_bits_per_dim
 from repro.data import make_lm_batch
 from repro.launch.mesh import make_mesh
 from repro.launch.sharding_rules import batch_specs
@@ -26,17 +28,25 @@ def main():
     shape = ShapeConfig("quickstart", seq_len=64, global_batch=8, kind="train")
     mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
 
-    opt = make_optimizer(cfg, lr=0.02)
+    # policy="default" selects the model's curated ModelConfig.comp_policy;
+    # omit it for the legacy flat single-operator config, or pass inline
+    # rules / a policy .json (see README "Compression policies").
+    opt = make_optimizer(cfg, lr=0.02, policy="default")
     key = jax.random.PRNGKey(0)
     params, opt_state, _ = init_train_state(cfg, opt, mesh, key)
     step_fn = build_train_step(cfg, opt, mesh, shape)
 
-    comp = opt.compressor  # registry-resolved operator instance
     print(f"model: {cfg.name}  params: {count_params(params):,}")
-    print(f"compressor: {opt.compression.method} -> {comp.name} "
-          f"(unbiased={comp.unbiased}, memory={comp.carries_state}) "
-          f"-> {payload_bits_per_dim(opt.compression):.2f} bits/dim "
-          f"(vs 32 uncompressed)")
+    part = partition_for(opt.policy, params)
+    groups = part.split(params)
+    for g, gname in enumerate(part.group_names):
+        comp = part.configs[g].make()
+        n_par = sum(int(l.size) for l in groups[g])
+        print(f"  group {gname}: {len(part.group_leaf_ids[g])} leaves, "
+              f"{n_par:,} params -> {comp.name} "
+              f"(unbiased={comp.unbiased}, memory={comp.carries_state})")
+    print(f"policy wire cost: {policy_bits_per_dim(opt.policy, params):.2f} "
+          f"bits/dim size-weighted (vs 32 uncompressed)")
 
     for step in range(10):
         hb = make_lm_batch(cfg, shape, step)

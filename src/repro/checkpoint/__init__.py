@@ -1,3 +1,9 @@
-from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .checkpoint import (
+    latest_step,
+    load_metadata,
+    restore_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "load_metadata"]

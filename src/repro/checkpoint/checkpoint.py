@@ -21,7 +21,8 @@ import jax
 import ml_dtypes
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "load_metadata"]
 
 _MANIFEST = "manifest.json"
 
@@ -52,7 +53,11 @@ def _path_str(entry) -> str:
     return str(entry)
 
 
-def save_checkpoint(directory: str, step: int, tree) -> str:
+def save_checkpoint(directory: str, step: int, tree, metadata=None) -> str:
+    """``metadata`` (a JSON-serializable dict, e.g. the serialized
+    :class:`~repro.core.policy.CompressionPolicy` that shaped a grouped
+    DianaState) rides in the manifest next to the keys/dtypes — read it back
+    with :func:`load_metadata` to rebuild a matching state template."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(tree)
     dtypes: Dict[str, str] = {}
@@ -71,6 +76,8 @@ def save_checkpoint(directory: str, step: int, tree) -> str:
     os.replace(tmp, path)
     manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes,
                 "file": os.path.basename(path)}
+    if metadata is not None:
+        manifest["metadata"] = metadata
     mtmp = path + ".manifest.tmp"
     with open(mtmp, "w") as f:
         json.dump(manifest, f, indent=1)
@@ -121,3 +128,13 @@ def latest_step(directory: str) -> int | None:
         return None
     with open(mpath) as f:
         return int(json.load(f)["step"])
+
+
+def load_metadata(directory: str):
+    """The manifest's ``metadata`` dict (``None`` for checkpoints written
+    without one — every pre-policy checkpoint)."""
+    mpath = os.path.join(directory, _MANIFEST)
+    if not os.path.exists(mpath):
+        return None
+    with open(mpath) as f:
+        return json.load(f).get("metadata")

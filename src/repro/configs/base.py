@@ -105,6 +105,16 @@ class ModelConfig:
                                    # compressor for the broadcast direction;
                                    # None = full-precision broadcast
     comp_down_k: Optional[int] = None  # sparse downlink budget; None = comp_k
+    comp_policy: Optional[str] = None  # the model's curated per-parameter-
+                                   # group compression policy (inline rule
+                                   # syntax, repro.core.policy.parse_rules) —
+                                   # OPT-IN via --comp-policy default /
+                                   # make_optimizer(policy="default"); the
+                                   # flat comp_* surface stays the default so
+                                   # existing configs/checkpoints are bitwise
+                                   # untouched.  tools/check_policy.py lints
+                                   # these strings against the arch's actual
+                                   # parameter tree in CI.
     h_dtype: Any = jnp.float32
 
     @property

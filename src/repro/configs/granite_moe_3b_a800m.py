@@ -33,4 +33,14 @@ def config() -> ModelConfig:
         comp_block=2048,
         attn_q_chunk=512,             # 24 heads don't shard over model=16 ->
                                       # scores replicate; keep chunks small
+        # Curated MoE policy (--comp-policy default): the router is tiny and
+        # decides every token's expert assignment -> exact (a quantized
+        # router reroutes tokens, compounding error); norms/biases exact;
+        # embeddings top-k; the expert FFN bulk takes natural compression
+        # (9 bits/dim, omega=1/8 — gentler than ternary on the sparsely-
+        # activated expert gradients); everything else ternary.
+        comp_policy=("router|scale$|bias=identity,"
+                     "^embed$|^lm_head$=topk_ef:k=256,"
+                     "mlp/w_=natural,"
+                     "*=diana"),
     )

@@ -26,4 +26,11 @@ def config() -> ModelConfig:
         pattern=(LayerSpec(mixer="mamba", mlp="none"),),
         ssm=SSMConfig(d_state=128, expand=2, head_dim=64, chunk_size=256),
         comp_block=1024,              # smaller blocks for a 130M model
+        # Curated SSM policy (--comp-policy default): the SSD dynamics
+        # parameters (A_log/D/dt_bias), conv kernels and norms are tiny and
+        # govern the recurrence's stability -> exact; embeddings top-k;
+        # projections ternary at the model's block size.
+        comp_policy=("A_log|dt_bias|/D$|scale$|conv_=identity,"
+                     "^embed$|^lm_head$=topk_ef:k=256,"
+                     "*=diana:block=1024"),
     )

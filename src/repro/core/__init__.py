@@ -24,7 +24,23 @@ from .compressors import (
     available_methods,
     make_compressor,
 )
-from .bucket import BucketLayout, BucketedCompressor, bucketed_compressor
+from .bucket import (
+    BucketLayout,
+    BucketedCompressor,
+    GroupedBucketLayout,
+    bucketed_compressor,
+)
+from .policy import (
+    ChannelSpec,
+    CompressionPolicy,
+    Rule,
+    as_policy,
+    grouped_bucket_layout,
+    load_policy,
+    parse_rules,
+    partition_for,
+    policy_bits_per_dim,
+)
 from .vr import (
     VarianceReducer,
     VRState,
@@ -36,6 +52,7 @@ from .vr import (
 )
 from .diana import (
     DOWN_FOLD,
+    GROUP_FOLD,
     DianaState,
     downlink_round,
     init_downlink,
@@ -53,11 +70,15 @@ __all__ = [
     "quantize_pytree", "dequantize_pytree", "expected_sparsity", "quantization_variance",
     "pack2bit", "unpack2bit", "packed_nbytes", "PACK_FACTOR",
     "CompressionConfig", "compress_tree", "decompress_tree", "payload_bits_per_dim",
+    "ChannelSpec", "CompressionPolicy", "Rule", "as_policy", "parse_rules",
+    "load_policy", "partition_for", "policy_bits_per_dim", "grouped_bucket_layout",
     "Compressor", "Payload", "available_methods", "make_compressor",
-    "BucketLayout", "BucketedCompressor", "bucketed_compressor", "bucket_layout",
+    "BucketLayout", "GroupedBucketLayout", "BucketedCompressor",
+    "bucketed_compressor", "bucket_layout",
     "VarianceReducer", "VRState", "control_variate", "init_vr", "refresh",
     "resolve_vr_p", "vr_coin",
-    "DianaState", "DOWN_FOLD", "init_state", "init_downlink", "downlink_round",
+    "DianaState", "DOWN_FOLD", "GROUP_FOLD", "init_state", "init_downlink",
+    "downlink_round",
     "aggregate_shardmap", "reference_init", "reference_step",
     "tree_zeros_like", "prox",
 ]

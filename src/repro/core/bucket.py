@@ -42,6 +42,7 @@ from .compressors.base import Compressor, Payload
 
 __all__ = [
     "BucketLayout",
+    "GroupedBucketLayout",
     "BucketedCompressor",
     "bucketed_compressor",
     "fuse_payload",
@@ -144,6 +145,40 @@ class BucketLayout:
             jax.lax.slice_in_dim(flat, off, off + ps)
             for off, ps in zip(self.offsets, self.padded_sizes)
         ]
+
+
+@dataclass(frozen=True)
+class GroupedBucketLayout:
+    """One :class:`BucketLayout` per compression-policy group.
+
+    A grouped bucketed round (repro.core.policy / repro.core.diana) fuses each
+    GROUP — not the whole model — into one flat buffer: a ternary-group +
+    top-k-group model still pays ~one collective per group per direction
+    instead of per leaf.  ``names`` are the policy's group names (the keys of
+    the grouped ``DianaState`` dicts), ``rule_ids`` the owning rule index of
+    each group (stable across trees, used by the wire-cost accounting).
+    """
+
+    names: Tuple[str, ...]
+    rule_ids: Tuple[int, ...]
+    layouts: Tuple[BucketLayout, ...]
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.layouts)
+
+    @property
+    def size(self) -> int:
+        """Total unpadded element count over every group."""
+        return sum(l.size for l in self.layouts)
+
+    @property
+    def padded_size(self) -> int:
+        return sum(l.padded_size for l in self.layouts)
+
+    @property
+    def n_leaves(self) -> int:
+        return sum(l.n_leaves for l in self.layouts)
 
 
 # ---------------------------------------------------------------------------

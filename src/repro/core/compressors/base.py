@@ -101,6 +101,15 @@ class Compressor:
                     identity baseline sets this; the reference simulation
                     still sums sequentially, so identity (alone) is exempt
                     from the bitwise reference/distributed contract.
+    replicate_perleaf: the per-leaf encode must see a REPLICATED input under
+                    partial-manual bodies with live auto inner axes: the
+                    operator's selection lowers through ops (top_k's sort)
+                    whose SPMD partitioning RET_CHECKs under manual
+                    subgroups on old XLA (DESIGN.md §6).  The aggregation
+                    loop pins such operators' compress input with an
+                    explicit replication constraint (a no-op outside GSPMD
+                    policies, so the reference path and nested-manual mode
+                    are untouched — constraints never change values).
     """
 
     name: str = "abstract"
@@ -108,6 +117,7 @@ class Compressor:
     carries_state: bool = False
     use_kernel: bool = False
     prefers_allreduce: bool = False
+    replicate_perleaf: bool = False
 
     # ---------------------------------------------------------------- wire
 

@@ -25,10 +25,52 @@ from .base import Compressor, Payload, index_dtype, index_nbits
 __all__ = ["TopKEFCompressor"]
 
 
+def _select_topk_sortfree(absx: jax.Array, kk: int) -> jax.Array:
+    """Indices of the ``kk`` largest entries of a non-negative f32 vector,
+    WITHOUT lax.sort/top_k — reductions, cumsums and one scatter only, all of
+    which partition cleanly under partial-manual bodies where XLA's sort
+    partitioner fatally RET_CHECKs (old XLA + live auto axes, DESIGN.md §6).
+
+    Exact-set contract with ``lax.top_k(absx, kk)``: non-negative f32 values
+    order identically to their uint32 bit patterns, so a 33-step bisection
+    over the bit space finds exactly the kk-th largest VALUE (the count
+    function only changes at data values); everything strictly above it is
+    taken, and ties at the threshold are taken in ascending index order —
+    the same tie-breaking lax.top_k's stable sort applies.  Only the output
+    ORDER differs (ascending index vs descending value), which scatter-add
+    decoding cannot observe.  Assumes no NaNs (a NaN gradient has already
+    lost; lax.top_k's NaN ordering is garbage too).
+    """
+    d = absx.shape[0]
+    bits = jax.lax.bitcast_convert_type(absx.astype(jnp.float32), jnp.uint32)
+
+    def bisect(_, lohi):
+        lo, hi = lohi  # invariant: count(bits >= lo) >= kk > count(bits >= hi)
+        mid = lo + (hi - lo) // 2
+        ok = jnp.sum((bits >= mid).astype(jnp.int32)) >= kk
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    thr, _ = jax.lax.fori_loop(
+        0, 33, bisect, (jnp.uint32(0), jnp.uint32(0xFFFFFFFF)))
+    gt = bits > thr
+    eq = bits == thr
+    take_eq = kk - jnp.sum(gt.astype(jnp.int32))
+    sel = gt | (eq & (jnp.cumsum(eq.astype(jnp.int32)) <= take_eq))
+    pos = jnp.cumsum(sel.astype(jnp.int32)) - 1
+    # Ascending-index enumeration of the selected coordinates: unselected
+    # entries scatter into the kk-th slot of a (kk+1,) scratch and fall off.
+    tgt = jnp.where(sel, pos, kk)
+    idx = jnp.zeros((kk + 1,), jnp.int32).at[tgt].set(
+        jnp.arange(d, dtype=jnp.int32))
+    return idx[:kk]
+
+
 class TopKEFCompressor(Compressor):
     name = "topk_ef"
     unbiased = False
     carries_state = True  # the EF residual
+    replicate_perleaf = True  # top_k's sort RET_CHECKs old XLA's partitioner
+                              # on sharded operands under manual subgroups
 
     def __init__(self, k: int):
         if k <= 0:
@@ -41,7 +83,22 @@ class TopKEFCompressor(Compressor):
         del key  # deterministic selection
         d = delta.shape[0]
         kk = min(self.k, d)
-        _, idx = jax.lax.top_k(jnp.abs(delta), kk)
+        absd = jnp.abs(delta)
+        from repro.models.sharding import GSPMDPolicy, current_policy
+
+        if isinstance(current_policy(), GSPMDPolicy):
+            # Inside a partial-manual trainer body lax.top_k cannot be used:
+            # XLA's sort partitioner fatally RET_CHECKs under manual
+            # subgroups with live auto axes (old XLA, DESIGN.md §6).  The
+            # sort-free threshold selection picks the IDENTICAL coordinate
+            # set (ties included — see _select_topk_sortfree), so the decoded
+            # dhat, the EF residual and every downstream bit are unchanged;
+            # only the wire ordering of the index/value pairs differs
+            # (ascending index instead of descending value), which nothing
+            # decodes order-dependently (scatter-add over unique indices).
+            idx = _select_topk_sortfree(absd, kk)
+        else:
+            _, idx = jax.lax.top_k(absd, kk)
         idx = idx.astype(index_dtype(d))
         return Payload(indices=idx, values=delta.astype(jnp.float32)[idx])
 

@@ -43,11 +43,13 @@ from .bucket import (
 )
 from .compression import CompressionConfig
 from .compressors import Compressor, Payload
+from .policy import CompressionPolicy, partition_for
 from .vr import VRState, control_variate, init_vr, reference_coins, refresh, vr_coin
 
 __all__ = [
     "DianaState",
     "DOWN_FOLD",
+    "GROUP_FOLD",
     "init_state",
     "init_downlink",
     "downlink_round",
@@ -64,6 +66,27 @@ __all__ = [
 # broadcast's PRNG stream is identical on every worker and never collides
 # with an uplink draw.  DESIGN.md §Bidirectional.
 DOWN_FOLD = 0x444E  # 'DN'
+
+# Grouped policies: group ``g`` draws from ``fold_in(worker_key, GROUP_FOLD+g)``
+# (and the downlink from ``fold_in(down_key, GROUP_FOLD+g)``) — applied AFTER
+# the worker fold in both the distributed and reference paths, so the two stay
+# bitwise-aligned, and disjoint from VR_FOLD/DOWN_FOLD and from any worker
+# index.  UNIFORM policies never fold this: the single-rule path IS the
+# pre-policy flat path, draw for draw (DESIGN.md §Policy).
+GROUP_FOLD = 0x4750  # 'GP'
+
+
+def _split_spec(spec):
+    """Normalize the ``cfg`` argument every entry point takes: returns
+    ``(policy, flat_cfg)`` where exactly one is non-None.  A uniform policy
+    collapses to its flat config — by construction the identical pre-policy
+    code path (the back-compat law); grouped policies return themselves and
+    dispatch through the grouped driver."""
+    if isinstance(spec, CompressionPolicy):
+        if spec.is_uniform:
+            return None, spec.flat_config()
+        return spec, None
+    return None, spec
 
 
 def tree_zeros_like(tree, dtype=None):
@@ -126,10 +149,12 @@ def bucket_layout(cfg: CompressionConfig, tree) -> BucketLayout:
     return BucketLayout.for_tree(tree, align=cfg.make().bucket_align())
 
 
-def init_downlink(params, cfg: CompressionConfig, dtype=None):
+def init_downlink(params, cfg: CompressionConfig, dtype=None, dcfg=None):
     """``h_down^0 = 0`` in the DOWNLINK operator's own layout (``None`` when
-    no downlink is configured) — one replicated copy, no worker dim."""
-    dcfg = cfg.down_config()
+    no downlink is configured) — one replicated copy, no worker dim.
+    ``dcfg`` overrides the derived ``cfg.down_config()`` (the grouped driver
+    passes each rule's standalone downlink config)."""
+    dcfg = cfg.down_config() if dcfg is None else dcfg
     if dcfg is None:
         return None
     dtype = cfg.h_dtype if dtype is None else dtype
@@ -138,11 +163,47 @@ def init_downlink(params, cfg: CompressionConfig, dtype=None):
     return jax.tree_util.tree_map(lambda p: jnp.zeros((p.size,), dtype), params)
 
 
-def init_state(params, cfg: CompressionConfig, n_workers: int) -> DianaState:
+def _init_grouped(params, policy: CompressionPolicy, n_workers: int, dtype=None):
+    """Per-group memory trees for a grouped policy: dicts keyed by group name
+    (``g<rule:02d>_<label>`` — sorted dict order == rule order), each entry in
+    that group's own layout: one ``(n, Dp_g)`` / ``(Dp_g,)`` buffer for a
+    bucketed group, lists of flat per-leaf memories otherwise.  Returns
+    ``(h_worker, h_server, h_down)`` (``h_down`` None when no rule has a
+    downlink)."""
+    part = partition_for(policy, params)
+    groups = part.split(params)
+    dtype = policy.h_dtype if dtype is None else dtype
+    h_w, h_s, h_d = {}, {}, {}
+    for g, gname in enumerate(part.group_names):
+        cfg_g, leaves = part.configs[g], groups[g]
+        if cfg_g.bucketed:
+            dp = bucket_layout(cfg_g, leaves).padded_size
+            h_w[gname] = jnp.zeros((n_workers, dp), dtype)
+            h_s[gname] = jnp.zeros((dp,), dtype)
+        else:
+            h_w[gname] = [jnp.zeros((n_workers, l.size), dtype) for l in leaves]
+            h_s[gname] = [jnp.zeros((l.size,), dtype) for l in leaves]
+        dcfg = part.down_configs[g]
+        if dcfg is not None:
+            h_d[gname] = init_downlink(leaves, cfg_g, dtype=dtype, dcfg=dcfg)
+    return h_w, h_s, (h_d if h_d else None)
+
+
+def init_state(params, cfg, n_workers: int) -> DianaState:
     """h_i^0 = 0 (the paper's experimental choice) for all operators; the VR
     slot (``cfg.vr``) starts at ``w_i^0 = x^0`` with zero ``mu`` (see
     :func:`repro.core.vr.init_vr` for how callers warm-start ``mu``); the
-    downlink memory (``cfg.down_method``) starts at ``h_down^0 = 0``."""
+    downlink memory (``cfg.down_method``) starts at ``h_down^0 = 0``.
+
+    ``cfg`` may be a flat :class:`CompressionConfig` OR a
+    :class:`~repro.core.policy.CompressionPolicy`: uniform policies produce
+    the byte-identical legacy layout; grouped policies store the memories per
+    group (:func:`_init_grouped`)."""
+    policy, cfg = _split_spec(cfg)
+    if policy is not None:
+        vr = init_vr(params, n_workers) if policy.vr else None
+        h_w, h_s, h_down = _init_grouped(params, policy, n_workers)
+        return DianaState(h_worker=h_w, h_server=h_s, vr=vr, h_down=h_down)
     vr = init_vr(params, n_workers) if cfg.vr else None
     h_down = init_downlink(params, cfg)
     if cfg.bucketed:
@@ -230,6 +291,13 @@ def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_wo
     )
 
     delta = jax.tree_util.tree_map(comp.compress_input, g_flat, h_local)
+    if comp.replicate_perleaf:
+        # Pin the encode input replicated: sort-selection operators (top-k)
+        # RET_CHECK old XLA's partitioner on sharded operands under manual
+        # subgroups.  No-op outside GSPMD policies (nested-manual/reference).
+        from repro.models.sharding import shard_replicated
+
+        delta = jax.tree_util.tree_map(shard_replicated, delta)
 
     leaves, treedef = jax.tree_util.tree_flatten(delta)
     keys = jax.random.split(key, len(leaves))
@@ -332,7 +400,7 @@ def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names, n
 # ---------------------------------------------------------------------------
 
 def downlink_round(ghat, h_down, down_key: jax.Array, cfg: CompressionConfig,
-                   *, h_dtype=None):
+                   *, h_dtype=None, dcfg=None):
     """Pass the aggregated direction ``ghat`` through the DOWNLINK compressor.
 
     The gradient-difference trick DIANA applies uplink, applied to the server
@@ -356,9 +424,11 @@ def downlink_round(ghat, h_down, down_key: jax.Array, cfg: CompressionConfig,
     any worker fold — the broadcast draws are worker-independent.
 
     Returns ``(ghat_hat, new_h_down)`` with ``ghat_hat`` shaped and typed
-    like ``ghat``.
+    like ``ghat``.  ``dcfg`` overrides the derived ``cfg.down_config()`` —
+    grouped policies pass each rule's standalone downlink config (which may
+    carry its own block size / norm power, inexpressible on a flat config).
     """
-    dcfg = cfg.down_config()
+    dcfg = cfg.down_config() if dcfg is None else dcfg
     assert dcfg is not None, "downlink_round needs cfg.down_method"
     h_dtype = cfg.h_dtype if h_dtype is None else h_dtype
 
@@ -380,6 +450,13 @@ def downlink_round(ghat, h_down, down_key: jax.Array, cfg: CompressionConfig,
     )
     h = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), h_down)
     delta = jax.tree_util.tree_map(comp.compress_input, g_flat, h)
+    if comp.replicate_perleaf:
+        # Same partitioner pin as the uplink per-leaf encode (see
+        # _aggregate_local) — the broadcast encode runs in the same
+        # partial-manual body.
+        from repro.models.sharding import shard_replicated
+
+        delta = jax.tree_util.tree_map(shard_replicated, delta)
     leaves, treedef = jax.tree_util.tree_flatten(delta)
     keys = jax.random.split(down_key, len(leaves))
     # Per-leaf payloads stay UNfused, mirroring the uplink (only the bucketed
@@ -472,11 +549,13 @@ def aggregate_shardmap(
     """
     axis_names = tuple(axis_names)
     inner_axes = tuple(inner_axes)
+    policy, cfg = _split_spec(cfg)
+    vr_p = policy.vr_p if policy is not None else cfg.vr_p
 
     grads_in = grads_local
     new_vr = state.vr
     if state.vr is not None:
-        assert cfg.vr_p is not None, (
+        assert vr_p is not None, (
             "VR aggregation needs a concrete snapshot probability — resolve "
             "cfg.vr_p (repro.core.vr.resolve_vr_p) before building the step")
         assert vr_aux is not None and params_local is not None, (
@@ -487,7 +566,7 @@ def aggregate_shardmap(
             lambda m: m[0].astype(jnp.float32), state.vr.mu
         )
         grads_in = control_variate(grads_local, g_snap, mu_own)
-        coins = vr_coin(key, cfg.vr_p)[None]
+        coins = vr_coin(key, vr_p)[None]
         if vr_force_refresh is not None:
             coins = coins | jnp.asarray(vr_force_refresh, bool)
         new_vr = refresh(
@@ -495,18 +574,26 @@ def aggregate_shardmap(
             jax.tree_util.tree_map(lambda g: g[None], mu_cand),
         )
 
-    ghat, new_hw, new_hs = _dispatch_round(
-        grads_in, state, key, cfg,
-        axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
-        grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
-    )
-    new_h_down = state.h_down
-    if state.h_down is not None:
-        assert down_key is not None, (
-            "bidirectional aggregation needs down_key = fold_in(step_key, "
-            "DOWN_FOLD) derived BEFORE the worker fold (identical on all "
-            "workers)")
-        ghat, new_h_down = downlink_round(ghat, state.h_down, down_key, cfg)
+    if policy is not None:
+        ghat, new_hw, new_hs, new_h_down = _aggregate_grouped(
+            grads_in, state, key, policy,
+            axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
+            grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
+            down_key=down_key,
+        )
+    else:
+        ghat, new_hw, new_hs = _dispatch_round(
+            grads_in, state, key, cfg,
+            axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
+            grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
+        )
+        new_h_down = state.h_down
+        if state.h_down is not None:
+            assert down_key is not None, (
+                "bidirectional aggregation needs down_key = fold_in(step_key, "
+                "DOWN_FOLD) derived BEFORE the worker fold (identical on all "
+                "workers)")
+            ghat, new_h_down = downlink_round(ghat, state.h_down, down_key, cfg)
     # The round (and the downlink, when on) ran in f32 — the bits the
     # reference path produces; restore the caller's gradient dtypes here so
     # the optimizer state layout is independent of the vr/downlink flags.
@@ -515,6 +602,76 @@ def aggregate_shardmap(
     )
     return ghat, DianaState(h_worker=new_hw, h_server=new_hs, vr=new_vr,
                             h_down=new_h_down)
+
+
+def _pspec_leaf(s) -> bool:
+    from jax.sharding import PartitionSpec as P
+
+    return isinstance(s, P)
+
+
+def _aggregate_grouped(
+    grads_local, state, key, policy: CompressionPolicy, *,
+    axis_names, n_workers, inner_axes, grad_specs, h_specs, mesh, down_key,
+):
+    """One aggregation round of a GROUPED policy inside the shard_map body.
+
+    The partition (cached, pure function of (policy, tree structure)) splits
+    the gradient tree into per-rule groups; each group then runs the SAME
+    sub-round the flat path runs — the pmean fast path for identity groups,
+    :func:`_aggregate_bucketed` on the group's own
+    :class:`~repro.core.bucket.BucketLayout` (one compress, one fused
+    all-gather, one decode_sum PER GROUP), or the per-leaf round — with the
+    group-folded key ``fold_in(worker_key, GROUP_FOLD+g)``, so mixed operators
+    share one aggregation step.  Groups with a ``down`` spec pass their slice
+    of the server direction through their own downlink compressor before the
+    merge.  Returns ``(ghat, h_worker, h_server, h_down)`` with the state
+    trees as group-name dicts (matching :func:`_init_grouped`).
+    """
+    part = partition_for(policy, grads_local)
+    g_groups = part.split(grads_local)
+    spec_groups = (part.split(grad_specs, is_leaf=_pspec_leaf)
+                   if grad_specs is not None else None)
+    hspec_groups = (part.split(h_specs, is_leaf=_pspec_leaf)
+                    if h_specs is not None else None)
+
+    ghat_groups = []
+    new_hw, new_hs, new_hd = {}, {}, {}
+    for g, gname in enumerate(part.group_names):
+        cfg_g = part.configs[g]
+        comp = cfg_g.make()
+        gkey = jax.random.fold_in(key, GROUP_FOLD + g)
+        hw_g, hs_g = state.h_worker[gname], state.h_server[gname]
+        if comp.prefers_allreduce:
+            ghat_g = [
+                jax.lax.pmean(gr, axis_names) if axis_names else gr
+                for gr in g_groups[g]
+            ]
+        elif cfg_g.bucketed:
+            ghat_g, hw_g, hs_g = _aggregate_bucketed(
+                g_groups[g], hw_g, hs_g, gkey, cfg_g, axis_names, n_workers)
+        else:
+            ghat_g, hw_g, hs_g = _perleaf_round(
+                g_groups[g], hw_g, hs_g, gkey, cfg_g,
+                axis_names=axis_names, n_workers=n_workers,
+                inner_axes=inner_axes,
+                grad_specs=spec_groups[g] if spec_groups is not None else None,
+                h_specs=hspec_groups[g] if hspec_groups is not None else None,
+                mesh=mesh)
+        dcfg = part.down_configs[g]
+        if dcfg is not None:
+            assert down_key is not None, (
+                "a policy with downlink rules needs down_key = "
+                "fold_in(step_key, DOWN_FOLD) derived BEFORE the worker fold")
+            ghat_g, new_hd[gname] = downlink_round(
+                ghat_g, state.h_down[gname],
+                jax.random.fold_in(down_key, GROUP_FOLD + g), cfg_g,
+                dcfg=dcfg, h_dtype=policy.h_dtype)
+        ghat_groups.append(ghat_g)
+        new_hw[gname] = hw_g
+        new_hs[gname] = hs_g
+    ghat = part.merge(ghat_groups)
+    return ghat, new_hw, new_hs, (new_hd if new_hd else None)
 
 
 def _dispatch_round(
@@ -544,11 +701,23 @@ def _dispatch_round(
             axis_names, n_workers,
         )
 
+    return _perleaf_round(
+        grads_local, state.h_worker, state.h_server, key, cfg,
+        axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
+        grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
+    )
+
+
+def _perleaf_round(grads_local, h_worker, h_server, key, cfg, *,
+                   axis_names, n_workers, inner_axes, grad_specs, h_specs, mesh):
+    """The per-leaf Algorithm-1 round, nested-manual where the toolchain and
+    caller-provided specs allow (DESIGN.md §6), local otherwise.  Shared by
+    the flat path and by each per-leaf GROUP of a grouped policy (whose trees
+    are leaf lists — any pytree works)."""
     if not inner_axes or grad_specs is None:
         # single-device / tests: everything already local
         return _aggregate_local(
-            grads_local, state.h_worker, state.h_server, key, cfg,
-            axis_names, n_workers,
+            grads_local, h_worker, h_server, key, cfg, axis_names, n_workers,
         )
 
     from jax.sharding import PartitionSpec as P
@@ -569,13 +738,14 @@ def _dispatch_round(
         with sharding_policy(NoopPolicy()):
             return _aggregate_local(grads, h_w, h_s, k, cfg, axis_names, n_workers)
 
-    hw_specs = jax.tree_util.tree_map(lambda s: P(None, *s), h_specs)
+    hw_specs = jax.tree_util.tree_map(lambda s: P(None, *s), h_specs,
+                                      is_leaf=_pspec_leaf)
     in_specs = (grad_specs, hw_specs, h_specs, P())
     out_specs = (grad_specs, hw_specs, h_specs)
     return _shard_map(
         body, mesh=amesh, in_specs=in_specs, out_specs=out_specs,
         axis_names=set(inner_axes), check_vma=False,
-    )(grads_local, state.h_worker, state.h_server, key)
+    )(grads_local, h_worker, h_server, key)
 
 
 # ---------------------------------------------------------------------------
@@ -591,7 +761,15 @@ class ReferenceState(NamedTuple):
     h_down: Any = None  # optional downlink memory, mirroring DianaState.h_down
 
 
-def reference_init(params, cfg: CompressionConfig, n_workers: int) -> ReferenceState:
+def reference_init(params, cfg, n_workers: int) -> ReferenceState:
+    policy, cfg = _split_spec(cfg)
+    if policy is not None:
+        vr = init_vr(params, n_workers) if policy.vr else None
+        h_w, h_s, h_down = _init_grouped(params, policy, n_workers,
+                                         dtype=jnp.float32)
+        return ReferenceState(h_worker=h_w, h_server=h_s,
+                              v=tree_zeros_like(params, jnp.float32),
+                              vr=vr, h_down=h_down)
     vr = init_vr(params, n_workers) if cfg.vr else None
     h_down = init_downlink(params, cfg, dtype=jnp.float32)
     if cfg.bucketed:
@@ -660,9 +838,12 @@ def reference_step(
 
     Returns (v, new_state): ``v = beta*v + ghat`` — caller does the prox step.
     """
+    policy, cfg = _split_spec(cfg)
+    vr_p = policy.vr_p if policy is not None else cfg.vr_p
+
     new_vr = state.vr
     if state.vr is not None:
-        assert cfg.vr_p is not None, (
+        assert vr_p is not None, (
             "VR reference step needs a concrete cfg.vr_p "
             "(repro.core.vr.resolve_vr_p)")
         assert vr_aux is not None and params is not None, (
@@ -671,15 +852,76 @@ def reference_step(
         g_snap, mu_cand = vr_aux
         grads_per_worker = control_variate(grads_per_worker, g_snap, state.vr.mu)
         nw = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
-        coins = reference_coins(key, cfg.vr_p, nw)
+        coins = reference_coins(key, vr_p, nw)
         if vr_force_refresh is not None:
             coins = coins | jnp.asarray(vr_force_refresh, bool)
         new_vr = refresh(state.vr, coins, params, mu_cand)
 
-    if cfg.bucketed:
-        ghat, new_state = _reference_agg_bucketed(grads_per_worker, state, key, cfg)
-        return _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta)
+    if policy is not None:
+        ghat, new_hw, new_hs, new_hd = _reference_grouped(
+            grads_per_worker, state, key, policy)
+        v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
+        return v, state._replace(h_worker=new_hw, h_server=new_hs, v=v,
+                                 vr=new_vr, h_down=new_hd)
 
+    if cfg.bucketed:
+        ghat, new_hw, new_hs = _reference_agg_bucketed(
+            grads_per_worker, state.h_worker, state.h_server, key, cfg)
+    else:
+        ghat, new_hw, new_hs = _reference_agg_perleaf(
+            grads_per_worker, state.h_worker, state.h_server, key, cfg)
+    new_state = state._replace(h_worker=new_hw, h_server=new_hs)
+    return _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta)
+
+
+def _reference_grouped(grads_per_worker, state, key, policy: CompressionPolicy):
+    """The reference-path mirror of :func:`_aggregate_grouped`: the same
+    partition, the same per-group sub-rounds, the same
+    ``fold_in(worker_key, GROUP_FOLD+g)`` draws (the group fold is applied
+    AFTER the worker fold on both paths) and the same per-group downlink
+    streams ``fold_in(fold_in(key, DOWN_FOLD), GROUP_FOLD+g)`` — so grouped
+    distributed and reference runs stay bitwise-aligned for every
+    non-identity operator (identity keeps its documented pmean exemption)."""
+    part = partition_for(policy, grads_per_worker)
+    g_groups = part.split(grads_per_worker)
+    ghat_groups = []
+    new_hw, new_hs, new_hd = {}, {}, {}
+    for g, gname in enumerate(part.group_names):
+        cfg_g = part.configs[g]
+        hw_g, hs_g = state.h_worker[gname], state.h_server[gname]
+        agg = (_reference_agg_bucketed if cfg_g.bucketed
+               else _reference_agg_perleaf)
+        ghat_g, hw_g, hs_g = agg(g_groups[g], hw_g, hs_g, key, cfg_g,
+                                 gfold=GROUP_FOLD + g)
+        dcfg = part.down_configs[g]
+        if dcfg is not None:
+            ghat_g, new_hd[gname] = downlink_round(
+                ghat_g, state.h_down[gname],
+                jax.random.fold_in(jax.random.fold_in(key, DOWN_FOLD),
+                                   GROUP_FOLD + g),
+                cfg_g, dcfg=dcfg, h_dtype=jnp.float32)
+        ghat_groups.append(ghat_g)
+        new_hw[gname] = hw_g
+        new_hs[gname] = hs_g
+    return part.merge(ghat_groups), new_hw, new_hs, (new_hd if new_hd else None)
+
+
+def _worker_key(key, w, gfold):
+    """The per-worker compression key: ``fold_in(key, w)``, then the group
+    fold for grouped policies — matching the distributed side, where the
+    worker fold happens at the caller and the group fold in
+    :func:`_aggregate_grouped`."""
+    k = jax.random.fold_in(key, w)
+    if gfold is not None:
+        k = jax.random.fold_in(k, gfold)
+    return k
+
+
+def _reference_agg_perleaf(grads_per_worker, h_worker, h_server, key, cfg,
+                           gfold=None):
+    """The per-leaf reference AGGREGATION on any pytree of stacked per-worker
+    grads (full trees on the flat path, leaf lists per policy group);
+    returns ``(ghat, new_h_worker, new_h_server)``."""
     comp = cfg.make()
     n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
 
@@ -690,12 +932,12 @@ def reference_step(
             lambda g: g[w].astype(jnp.float32).reshape(-1), grads_per_worker
         )
         hw = jax.tree_util.tree_map(
-            lambda h: h[w].astype(jnp.float32), state.h_worker
+            lambda h: h[w].astype(jnp.float32), h_worker
         )
         delta = jax.tree_util.tree_map(comp.compress_input, gw, hw)
 
         leaves, treedef = jax.tree_util.tree_flatten(delta)
-        keys = jax.random.split(jax.random.fold_in(key, w), len(leaves))
+        keys = jax.random.split(_worker_key(key, w, gfold), len(leaves))
         payloads = [comp.compress(leaf, k) for leaf, k in zip(leaves, keys)]
         dhat_w = jax.tree_util.tree_unflatten(
             treedef, [comp.decode(p, leaf.size) for p, leaf in zip(payloads, leaves)]
@@ -720,18 +962,16 @@ def reference_step(
     ])
 
     ghat_flat = jax.tree_util.tree_map(
-        comp.server_direction, state.h_server, dhat_mean
+        comp.server_direction, h_server, dhat_mean
     )
-    new_state = state._replace(
-        h_worker=jax.tree_util.tree_map(lambda *rows: jnp.stack(rows), *new_h_rows),
-        h_server=jax.tree_util.tree_map(
-            comp.next_server_memory, state.h_server, dhat_mean
-        ),
+    new_hw = jax.tree_util.tree_map(lambda *rows: jnp.stack(rows), *new_h_rows)
+    new_hs = jax.tree_util.tree_map(
+        comp.next_server_memory, h_server, dhat_mean
     )
     ghat = jax.tree_util.tree_map(
         lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
     )
-    return _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta)
+    return ghat, new_hw, new_hs
 
 
 def _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta):
@@ -749,12 +989,14 @@ def _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta):
     return v, new_state._replace(v=v, vr=new_vr, h_down=new_h_down)
 
 
-def _reference_agg_bucketed(grads_per_worker, state, key, cfg):
+def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
+                            gfold=None):
     """The bucketed reference AGGREGATION (uplink only — downlink and
-    momentum live in the shared :func:`_reference_finish` tail): scan over
-    workers, each round ONE compress on the flattened model; ONE decode_sum
-    over the scan-stacked payload.  Bitwise-equal to the per-leaf reference
-    (same draws, same recurrences) and to the distributed bucketed path."""
+    momentum live in the callers' shared tails): scan over workers, each
+    round ONE compress on the flattened model (or policy group); ONE
+    decode_sum over the scan-stacked payload.  Bitwise-equal to the per-leaf
+    reference (same draws, same recurrences) and to the distributed bucketed
+    path."""
     layout = bucket_layout(cfg, jax.tree_util.tree_map(
         lambda g: g[0], grads_per_worker
     ))
@@ -766,20 +1008,17 @@ def _reference_agg_bucketed(grads_per_worker, state, key, cfg):
         w, g_row, h_row = xs
         flat_g = layout.flatten(g_row)
         delta = comp.compress_input(flat_g, h_row)
-        payload = comp.compress(delta, jax.random.fold_in(key, w))
+        payload = comp.compress(delta, _worker_key(key, w, gfold))
         dhat_w = comp.decode(payload, dp)
         return None, (payload, comp.next_memory(h_row, dhat_w, delta))
 
     _, (stacked, new_h) = jax.lax.scan(
         worker_round, None,
-        (jnp.arange(n), grads_per_worker, state.h_worker),
+        (jnp.arange(n), grads_per_worker, h_worker),
     )
     dhat_mean = comp.decode_sum(stacked, n, dp) / n
 
-    ghat_flat = comp.server_direction(state.h_server, dhat_mean)
-    new_state = state._replace(
-        h_worker=new_h,
-        h_server=comp.next_server_memory(state.h_server, dhat_mean),
-    )
+    ghat_flat = comp.server_direction(h_server, dhat_mean)
+    new_hs = comp.next_server_memory(h_server, dhat_mean)
     ghat = layout.unflatten(ghat_flat, cast=False)  # f32, like the per-leaf ref
-    return ghat, new_state
+    return ghat, new_h, new_hs

@@ -1,0 +1,652 @@
+"""Compression policies: per-parameter-group operator rules.
+
+The paper's block-quantization analysis (Def. 2 and the block-size theorem)
+ties the quantization variance — and therefore every rate — to ``alpha_p(d_l)``
+of each BLOCK, not of the whole model; Horváth et al. (arXiv:1904.05115)
+likewise state their rates per operator.  Nothing in the theory requires every
+parameter leaf to share one compressor, and the interesting regimes are
+heterogeneous: keep layernorms/biases exact, top-k the embedding tables,
+ternary-quantize the dense bulk, pick a different broadcast operator per group.
+
+Two first-class objects express that:
+
+* :class:`ChannelSpec` — ONE direction's operator for one group of leaves:
+  ``method`` plus its knobs (``k``, ``block_size``, ``p``, ``alpha``) and the
+  execution ``layout`` (``"bucketed"`` = the group aggregates as one fused
+  flat buffer, ``"perleaf"``, or ``None`` = the policy default).  Unset knobs
+  inherit the flat-config defaults — and, for a downlink spec, the uplink
+  spec's values first (the legacy ``down_k``-inherits-``k`` semantics).
+
+* :class:`CompressionPolicy` — an ORDERED list of :class:`Rule`\\ s mapping
+  pytree path patterns (``re.search`` over ``/``-joined key paths) to specs,
+  first match wins, plus the model-wide knobs that cannot vary per group
+  (``h_dtype``, ``worker_axes``, ``use_kernel``, the default layout, and the
+  VR switch — VR is a worker-side estimator transform applied before any
+  grouping).  The last rule must be a catch-all (``".*"``) so every leaf
+  resolves; ``tools/check_policy.py`` lints exactly that.
+
+Back-compat is a LAW, not an aspiration: :meth:`CompressionPolicy.uniform`
+lifts a legacy flat :class:`~repro.core.compression.CompressionConfig` into a
+one-rule policy whose :meth:`flat_config` round-trips to an EQUAL config —
+uniform policies dispatch through the identical pre-policy code path in
+``repro.core.diana``, so every existing config, CLI flag and checkpoint keeps
+working bitwise (``tests/test_policy.py``).  Grouped (multi-rule) policies run
+the grouped driver: one aggregation sub-round per group with a disjoint PRNG
+fold (``repro.core.diana.GROUP_FOLD``), at most one compress / all-gather /
+decode_sum per group per direction.  DESIGN.md §Policy.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import math
+import os
+import re
+from dataclasses import dataclass, replace as _dc_replace
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bucket import BucketLayout, GroupedBucketLayout
+from .compression import CompressionConfig
+from .compressors.registry import canonical_name
+
+__all__ = [
+    "ChannelSpec",
+    "Rule",
+    "CompressionPolicy",
+    "as_policy",
+    "parse_rules",
+    "load_policy",
+    "partition_for",
+    "PolicyPartition",
+    "grouped_bucket_layout",
+    "policy_bits_per_dim",
+    "tree_paths",
+]
+
+# Single source of truth for unset ChannelSpec knobs: the flat config's own
+# field defaults (k=64, block_size=2048, p=inf).
+_FLAT_DEFAULTS = CompressionConfig()
+
+_LAYOUTS = ("bucketed", "perleaf")
+# Patterns recognised as the catch-all rule (the linter requires exactly one,
+# in last position; ``parse_rules`` spells it ``*``).
+_CATCH_ALL = ("", ".*")
+
+_H_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+             "float16": jnp.float16}
+
+
+@dataclass(frozen=True)
+class ChannelSpec:
+    """One direction's compression operator for one parameter group.
+
+    method:     any registry name or alias (ternary | natural | randk |
+                topk_ef | identity, or the legacy diana | qsgd | terngrad |
+                dqgd | none).
+    k:          kept coordinates for the sparse operators.  ``None`` inherits
+                (downlink: the uplink's ``k``; else the flat default 64).
+    block_size: quantization block d_l (Def. 2) for the ternary family.
+    p:          norm power of the ternary family (2.0 or math.inf).
+    alpha:      memory-rate override (``None`` = the operator's theory
+                default).
+    layout:     ``"bucketed"`` | ``"perleaf"`` | ``None`` (= the policy's
+                default layout).  Bucketed groups aggregate as ONE fused flat
+                buffer — one compress, one all-gather, one decode_sum.
+    """
+
+    method: str = "diana"
+    k: Optional[int] = None
+    block_size: Optional[int] = None
+    p: Optional[float] = None
+    alpha: Optional[float] = None
+    layout: Optional[str] = None
+
+    def __post_init__(self):
+        canonical_name(self.method)  # raises on unknown methods
+        if self.layout is not None and self.layout not in _LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {_LAYOUTS} or None, got {self.layout!r}")
+        if self.block_size is not None and self.block_size % 4:
+            raise ValueError("block_size must be a multiple of 4 for 2-bit packing")
+        if self.k is not None and self.k <= 0:
+            raise ValueError(f"k must be positive, got {self.k}")
+
+
+def _pick(spec: ChannelSpec, base: Optional[ChannelSpec], fld: str, default):
+    """Resolve one spec field: own value, else the base (uplink) spec's, else
+    the flat-config default."""
+    v = getattr(spec, fld)
+    if v is None and base is not None:
+        v = getattr(base, fld)
+    return default if v is None else v
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One policy rule: leaves whose path matches ``pattern`` (``re.search``
+    over the ``/``-joined key path, e.g. ``blocks/layer0/norm1/scale``) use
+    ``spec`` uplink and — when set — ``down`` for the server broadcast.
+    ``name`` labels the group in state trees and benchmarks (default: the
+    spec's canonical method name)."""
+
+    pattern: str
+    spec: ChannelSpec
+    down: Optional[ChannelSpec] = None
+    name: Optional[str] = None
+
+    def __post_init__(self):
+        re.compile(self.pattern)  # raises on invalid regexes
+
+    def matches(self, path: str) -> bool:
+        return re.search(self.pattern, path) is not None
+
+    @property
+    def is_catch_all(self) -> bool:
+        return self.pattern in _CATCH_ALL
+
+    def label(self) -> str:
+        return self.name or canonical_name(self.spec.method)
+
+
+@dataclass(frozen=True)
+class CompressionPolicy:
+    """Ordered path-pattern -> :class:`ChannelSpec` rules + model-wide knobs.
+
+    rules:       first-match-wins, last must be a catch-all.  Group identity
+                 is the rule (all leaves matching rule i form group i), so a
+                 model's state layout is a pure function of (policy, pytree).
+    bucketed:    default layout for specs with ``layout=None``.
+    h_dtype / worker_axes / use_kernel:  as on the flat config — model-wide.
+    vr / vr_p:   VR-DIANA switch.  Model-wide: the L-SVRG control variate is
+                 applied to the parameter-shaped gradients BEFORE any grouping
+                 (repro.core.vr), so it composes with every rule unchanged.
+    """
+
+    rules: Tuple[Rule, ...] = (Rule(".*", ChannelSpec()),)
+    bucketed: bool = False
+    h_dtype: Any = jnp.float32
+    worker_axes: Tuple[str, ...] = ("pod", "data")
+    use_kernel: Optional[bool] = None
+    vr: bool = False
+    vr_p: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        object.__setattr__(self, "worker_axes", tuple(self.worker_axes))
+        if not self.rules:
+            raise ValueError("a CompressionPolicy needs at least one rule")
+        if len(self.rules) > 100:
+            raise ValueError("at most 100 rules (group names are zero-padded "
+                             "to two digits for stable dict ordering)")
+        if self.vr_p is not None and not 0.0 < self.vr_p <= 1.0:
+            raise ValueError(f"vr_p must be in (0, 1], got {self.vr_p}")
+
+    # --------------------------------------------------------------- matching
+
+    def match(self, path: str) -> int:
+        """Index of the first rule matching ``path`` (ordered, first wins)."""
+        for i, rule in enumerate(self.rules):
+            if rule.matches(path):
+                return i
+        raise KeyError(
+            f"no rule matches leaf path {path!r} — policies must end with a "
+            f"catch-all rule ('.*'); have patterns "
+            f"{[r.pattern for r in self.rules]}")
+
+    # ------------------------------------------------- flat-config round-trip
+
+    @property
+    def is_uniform(self) -> bool:
+        """One catch-all rule expressible as a flat ``CompressionConfig`` —
+        such policies dispatch through the identical pre-policy code path
+        (the bitwise back-compat law, tests/test_policy.py)."""
+        if len(self.rules) != 1 or not self.rules[0].is_catch_all:
+            return False
+        d = self.rules[0].down
+        # The flat config cannot give the downlink its own block/p/alpha.
+        return d is None or all(
+            getattr(d, f) is None for f in ("block_size", "p", "alpha"))
+
+    @classmethod
+    def uniform(cls, cfg: CompressionConfig) -> "CompressionPolicy":
+        """Lift a legacy flat config into a one-rule policy.
+
+        Law: ``uniform(cfg).flat_config() == cfg`` for every flat config, so
+        the shimmed policy reaches the exact pre-policy aggregation path.
+        """
+        spec = ChannelSpec(method=cfg.method, k=cfg.k, block_size=cfg.block_size,
+                           p=cfg.p, alpha=cfg.alpha)
+        down = None
+        if cfg.down_method is not None:
+            down = ChannelSpec(
+                method=cfg.down_method, k=cfg.down_k,
+                layout=None if cfg.down_bucketed is None
+                else _LAYOUTS[0] if cfg.down_bucketed else _LAYOUTS[1])
+        return cls(rules=(Rule(".*", spec, down=down),), bucketed=cfg.bucketed,
+                   h_dtype=cfg.h_dtype, worker_axes=cfg.worker_axes,
+                   use_kernel=cfg.use_kernel, vr=cfg.vr, vr_p=cfg.vr_p)
+
+    def flat_config(self) -> CompressionConfig:
+        """The legacy flat config of a uniform policy (inverse of
+        :meth:`uniform`); raises for grouped policies."""
+        if not self.is_uniform:
+            raise ValueError(
+                "grouped policies have no flat CompressionConfig equivalent; "
+                "use .rules / rule_config() (or representative_config() for "
+                "the model-wide fields)")
+        rule = self.rules[0]
+        s, d = rule.spec, rule.down
+        return CompressionConfig(
+            method=s.method,
+            p=_pick(s, None, "p", _FLAT_DEFAULTS.p),
+            block_size=_pick(s, None, "block_size", _FLAT_DEFAULTS.block_size),
+            alpha=s.alpha,
+            k=_pick(s, None, "k", _FLAT_DEFAULTS.k),
+            h_dtype=self.h_dtype,
+            worker_axes=self.worker_axes,
+            use_kernel=self.use_kernel,
+            bucketed=self._spec_bucketed(s),
+            vr=self.vr,
+            vr_p=self.vr_p,
+            down_method=None if d is None else d.method,
+            down_k=None if d is None else d.k,
+            down_bucketed=None if d is None or d.layout is None
+            else d.layout == "bucketed",
+        )
+
+    def representative_config(self) -> CompressionConfig:
+        """A flat view of the CATCH-ALL rule carrying the policy's model-wide
+        fields (``worker_axes``/``vr``/``h_dtype``/...) — for call sites that
+        only need those; per-group fields are representative only."""
+        if self.is_uniform:
+            return self.flat_config()
+        catch = next((i for i, r in enumerate(self.rules) if r.is_catch_all),
+                     len(self.rules) - 1)
+        cfg = _rule_config(self, catch)
+        return _dc_replace(cfg, vr=self.vr, vr_p=self.vr_p)
+
+    # ------------------------------------------------------- per-rule configs
+
+    def _spec_bucketed(self, spec: ChannelSpec) -> bool:
+        return self.bucketed if spec.layout is None else spec.layout == "bucketed"
+
+    def rule_config(self, i: int) -> CompressionConfig:
+        """The UPLINK :class:`CompressionConfig` of rule ``i``'s group
+        (vr/downlink stripped — VR is applied globally, the downlink has its
+        own config from :meth:`rule_down_config`)."""
+        return _rule_config(self, i)
+
+    def rule_down_config(self, i: int) -> Optional[CompressionConfig]:
+        """Rule ``i``'s standalone DOWNLINK config (``None`` when the rule
+        has no ``down`` spec).  Unset down knobs inherit the uplink spec's
+        (the legacy ``down_config()`` derivation semantics)."""
+        return _rule_down_config(self, i)
+
+    def any_bucketed(self) -> bool:
+        """Whether any group (either direction) resolves to the bucketed
+        layout — the condition ``launch.train.resolve_bucketed`` gates on."""
+        for i, rule in enumerate(self.rules):
+            if self._spec_bucketed(rule.spec):
+                return True
+            d = self.rule_down_config(i)
+            if d is not None and d.bucketed:
+                return True
+        return False
+
+    # ------------------------------------------------------------- rewriting
+
+    def replace(self, **kw) -> "CompressionPolicy":
+        """``dataclasses.replace`` — the policy analogue of rebuilding a flat
+        config; the legacy ``DianaOptimizer(vr=, vr_p=)`` kwargs shim onto
+        ``policy.replace(vr=, vr_p=)``."""
+        return _dc_replace(self, **kw)
+
+    def with_down(self, method: Optional[str] = None,
+                  k: Optional[int] = None) -> "CompressionPolicy":
+        """Attach/override the downlink channel on EVERY rule — the legacy
+        ``down_method``/``down_k`` override semantics.  A ``k`` override
+        without a method (given or already present) is inert, exactly like
+        ``down_k`` on a config whose ``down_method`` is None."""
+
+        def upd(rule: Rule) -> Rule:
+            m = method if method is not None else (
+                rule.down.method if rule.down is not None else None)
+            if m is None:
+                return rule
+            base = rule.down if rule.down is not None else ChannelSpec(method=m)
+            return _dc_replace(rule, down=_dc_replace(
+                base, method=m, k=k if k is not None else base.k))
+
+        return _dc_replace(self, rules=tuple(upd(r) for r in self.rules))
+
+    def force_perleaf(self) -> "CompressionPolicy":
+        """Every group (both directions) downgraded to the per-leaf layout —
+        what ``resolve_bucketed`` applies on toolchains where the flat-buffer
+        round cannot lower (DESIGN.md §6).  Bitwise the same results, just
+        more collectives."""
+
+        def fix(rule: Rule) -> Rule:
+            spec = (_dc_replace(rule.spec, layout="perleaf")
+                    if rule.spec.layout == "bucketed" else rule.spec)
+            down = rule.down
+            if down is not None:
+                down = _dc_replace(down, layout="perleaf")
+            return _dc_replace(rule, spec=spec, down=down)
+
+        return _dc_replace(self, bucketed=False,
+                           rules=tuple(fix(r) for r in self.rules))
+
+    # ---------------------------------------------------------- serialization
+
+    def to_json_dict(self) -> dict:
+        def spec_dict(s: ChannelSpec) -> dict:
+            d = {"method": s.method}
+            for f in ("k", "block_size", "alpha", "layout"):
+                if getattr(s, f) is not None:
+                    d[f] = getattr(s, f)
+            if s.p is not None:
+                d["p"] = "inf" if s.p == math.inf else s.p
+            return d
+
+        rules = []
+        for r in self.rules:
+            rd = {"pattern": r.pattern, **spec_dict(r.spec)}
+            if r.down is not None:
+                rd["down"] = spec_dict(r.down)
+            if r.name is not None:
+                rd["name"] = r.name
+            rules.append(rd)
+        doc = {"rules": rules, "bucketed": self.bucketed,
+               "worker_axes": list(self.worker_axes)}
+        if self.h_dtype is not jnp.float32:
+            doc["h_dtype"] = jnp.dtype(self.h_dtype).name
+        if self.use_kernel is not None:
+            doc["use_kernel"] = self.use_kernel
+        if self.vr:
+            doc["vr"] = True
+        if self.vr_p is not None:
+            doc["vr_p"] = self.vr_p
+        return doc
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_json_dict(), indent=1)
+
+    @classmethod
+    def from_json_dict(cls, doc: dict, **defaults) -> "CompressionPolicy":
+        """Build from a JSON dict; ``defaults`` seed the model-wide fields and
+        the document's explicit keys win."""
+
+        def spec_of(d: dict) -> ChannelSpec:
+            kw = {"method": d["method"]}
+            for f in ("k", "block_size", "alpha", "layout"):
+                if f in d:
+                    kw[f] = d[f]
+            if "block" in d:  # inline-syntax alias tolerated in JSON too
+                kw["block_size"] = d["block"]
+            if "p" in d:
+                kw["p"] = math.inf if d["p"] in ("inf", "Infinity") else float(d["p"])
+            return ChannelSpec(**kw)
+
+        rules = tuple(
+            Rule(pattern=rd["pattern"], spec=spec_of(rd),
+                 down=spec_of(rd["down"]) if rd.get("down") else None,
+                 name=rd.get("name"))
+            for rd in doc["rules"])
+        kw = dict(defaults)
+        for f in ("bucketed", "use_kernel", "vr", "vr_p"):
+            if f in doc:
+                kw[f] = doc[f]
+        if "worker_axes" in doc:
+            kw["worker_axes"] = tuple(doc["worker_axes"])
+        if "h_dtype" in doc:
+            kw["h_dtype"] = _H_DTYPES[doc["h_dtype"]]
+        return cls(rules=rules, **kw)
+
+    @classmethod
+    def from_json(cls, text: str, **defaults) -> "CompressionPolicy":
+        return cls.from_json_dict(json.loads(text), **defaults)
+
+
+@functools.lru_cache(maxsize=None)
+def _rule_config(policy: CompressionPolicy, i: int) -> CompressionConfig:
+    spec = policy.rules[i].spec
+    return CompressionConfig(
+        method=spec.method,
+        p=_pick(spec, None, "p", _FLAT_DEFAULTS.p),
+        block_size=_pick(spec, None, "block_size", _FLAT_DEFAULTS.block_size),
+        alpha=spec.alpha,
+        k=_pick(spec, None, "k", _FLAT_DEFAULTS.k),
+        h_dtype=policy.h_dtype,
+        worker_axes=policy.worker_axes,
+        use_kernel=policy.use_kernel,
+        bucketed=policy._spec_bucketed(spec),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _rule_down_config(policy: CompressionPolicy, i: int) -> Optional[CompressionConfig]:
+    rule = policy.rules[i]
+    if rule.down is None:
+        return None
+    up, d = rule.spec, rule.down
+    up_bucketed = policy._spec_bucketed(up)
+    return CompressionConfig(
+        method=d.method,
+        p=_pick(d, up, "p", _FLAT_DEFAULTS.p),
+        block_size=_pick(d, up, "block_size", _FLAT_DEFAULTS.block_size),
+        alpha=d.alpha if d.alpha is not None else up.alpha,
+        k=_pick(d, up, "k", _FLAT_DEFAULTS.k),
+        h_dtype=policy.h_dtype,
+        worker_axes=policy.worker_axes,
+        use_kernel=policy.use_kernel,
+        bucketed=up_bucketed if d.layout is None else d.layout == "bucketed",
+    )
+
+
+def as_policy(spec) -> CompressionPolicy:
+    """Coerce a :class:`CompressionConfig` | :class:`CompressionPolicy` to a
+    policy (the config becomes a one-rule uniform policy)."""
+    if isinstance(spec, CompressionPolicy):
+        return spec
+    return CompressionPolicy.uniform(spec)
+
+
+# ---------------------------------------------------------------------------
+# Tree partitioning: leaves -> groups by rule (static, cached)
+# ---------------------------------------------------------------------------
+
+def _path_entry_str(entry) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def tree_paths(tree, is_leaf=None) -> Tuple[str, ...]:
+    """The ``/``-joined key path of every leaf (tree_flatten order) — the
+    strings rule patterns match against."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    return tuple("/".join(_path_entry_str(e) for e in path) for path, _ in flat)
+
+
+class PolicyPartition:
+    """Static partition of ONE pytree structure under a policy.
+
+    Built once per (policy, treedef) — cacheable because group membership is
+    a pure function of leaf paths — and reused by init/aggregation/sharding/
+    checkpointing, so every consumer agrees on the grouping.  Group g holds
+    the leaves matching rule ``rule_ids[g]``, in tree-flatten order; group
+    names are ``g<rule_index:02d>_<label>`` (zero-padded so dict key sorting
+    — jax's pytree ordering for dicts — preserves rule order).
+    """
+
+    def __init__(self, policy: CompressionPolicy, treedef, paths: Tuple[str, ...]):
+        self.policy = policy
+        self.treedef = treedef
+        self.paths = paths
+        leaf_rule = tuple(policy.match(p) for p in paths)
+        active = sorted(set(leaf_rule))
+        self.rule_ids: Tuple[int, ...] = tuple(active)
+        self.group_names: Tuple[str, ...] = tuple(
+            f"g{ri:02d}_{policy.rules[ri].label()}" for ri in active)
+        self.group_leaf_ids: Tuple[Tuple[int, ...], ...] = tuple(
+            tuple(i for i, r in enumerate(leaf_rule) if r == ri)
+            for ri in active)
+        self.configs: Tuple[CompressionConfig, ...] = tuple(
+            policy.rule_config(ri) for ri in active)
+        self.down_configs: Tuple[Optional[CompressionConfig], ...] = tuple(
+            policy.rule_down_config(ri) for ri in active)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.rule_ids)
+
+    def split(self, tree, is_leaf=None):
+        """Per-group LISTS of this tree's leaves (a list is a pytree, so the
+        per-group sub-round machinery consumes them unchanged).  Works for any
+        tree sharing the partition's leaf order — grads, params, stacked
+        per-worker trees, PartitionSpec trees (pass ``is_leaf``)."""
+        leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_leaf)
+        if len(leaves) != len(self.paths):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves, partition expects "
+                f"{len(self.paths)}")
+        return [[leaves[i] for i in ids] for ids in self.group_leaf_ids]
+
+    def merge(self, group_parts):
+        """Inverse of :meth:`split`: per-group leaf lists -> the full tree."""
+        out = [None] * len(self.paths)
+        for ids, part in zip(self.group_leaf_ids, group_parts):
+            leaves = jax.tree_util.tree_leaves(part)
+            assert len(leaves) == len(ids)
+            for i, leaf in zip(ids, leaves):
+                out[i] = leaf
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+
+@functools.lru_cache(maxsize=None)
+def _partition_cached(policy, treedef, paths) -> PolicyPartition:
+    return PolicyPartition(policy, treedef, paths)
+
+
+def partition_for(policy: CompressionPolicy, tree) -> PolicyPartition:
+    """The (cached) partition of ``tree``'s structure under ``policy``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = tuple("/".join(_path_entry_str(e) for e in path) for path, _ in flat)
+    return _partition_cached(policy, treedef, paths)
+
+
+# ---------------------------------------------------------------------------
+# Grouped bucket layout + policy-aware wire accounting
+# ---------------------------------------------------------------------------
+
+def grouped_bucket_layout(policy: CompressionPolicy, tree) -> GroupedBucketLayout:
+    """One :class:`~repro.core.bucket.BucketLayout` per group (each aligned to
+    its own operator's ``bucket_align()``) — the flat-buffer layout a grouped
+    bucketed round aggregates in: one fused buffer per group."""
+    part = partition_for(policy, tree)
+    groups = part.split(tree)
+    layouts = tuple(
+        BucketLayout.for_tree(groups[g], align=part.configs[g].make().bucket_align())
+        for g in range(part.n_groups))
+    return GroupedBucketLayout(names=part.group_names, rule_ids=part.rule_ids,
+                               layouts=layouts)
+
+
+def policy_bits_per_dim(policy: CompressionPolicy, layout) -> float:
+    """Size-weighted mean UPLINK wire cost per coordinate across groups — the
+    policy-aware analogue of
+    :func:`repro.core.compression.payload_bits_per_dim`.  ``layout`` is a
+    :class:`~repro.core.bucket.GroupedBucketLayout` (or any params-like
+    pytree, from which one is derived)."""
+    if not isinstance(layout, GroupedBucketLayout):
+        layout = grouped_bucket_layout(policy, layout)
+    bits = total = 0.0
+    for ri, lay in zip(layout.rule_ids, layout.layouts):
+        comp = policy.rule_config(ri).make()
+        for s in lay.sizes:
+            bits += comp.bits_per_dim(s) * s
+            total += s
+    return bits / max(total, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Inline rule syntax + file loading (the trainer's --comp-policy surface)
+# ---------------------------------------------------------------------------
+
+_SPEC_FIELDS = {"k": int, "block_size": int, "alpha": float}
+_FIELD_ALIASES = {"block": "block_size"}
+
+
+def _parse_spec(text: str) -> ChannelSpec:
+    parts = [b.strip() for b in text.strip().split(":") if b.strip()]
+    if not parts:
+        raise ValueError("empty operator spec")
+    kw: dict = {"method": parts[0]}
+    for item in parts[1:]:
+        fld, sep, val = item.partition("=")
+        if not sep:
+            raise ValueError(f"spec option {item!r} is not field=value")
+        fld = _FIELD_ALIASES.get(fld, fld)
+        if fld == "layout":
+            kw[fld] = val
+        elif fld == "p":
+            kw[fld] = math.inf if val in ("inf", "Inf", "INF") else float(val)
+        elif fld in _SPEC_FIELDS:
+            kw[fld] = _SPEC_FIELDS[fld](val)
+        else:
+            raise ValueError(f"unknown spec field {fld!r} in {text!r}")
+    return ChannelSpec(**kw)
+
+
+def parse_rules(text: str) -> Tuple[Rule, ...]:
+    """Parse the inline rule syntax:
+
+        pattern=method[:field=value...][/down_method[:field=value...]] , ...
+
+    e.g. ``scale|bias=identity,embed=topk_ef:k=256,*=diana:block=1024/natural``
+    — ``*`` is the catch-all, ``block`` aliases ``block_size``, ``/`` attaches
+    the downlink channel.  Patterns are ``re.search`` regexes and may contain
+    ``/`` (paths are ``/``-joined, e.g. ``mlp/w_``; only the ``/`` AFTER the
+    first ``=`` separates the downlink spec); they may not contain ``,`` or
+    ``=`` (use a JSON policy file for those).
+    """
+    rules = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        pattern, sep, spec_txt = part.partition("=")
+        if not sep or not spec_txt:
+            raise ValueError(f"rule {part!r} is not pattern=method[...]")
+        up_txt, _, down_txt = spec_txt.partition("/")
+        pattern = pattern.strip()
+        rules.append(Rule(
+            pattern=".*" if pattern == "*" else pattern,
+            spec=_parse_spec(up_txt),
+            down=_parse_spec(down_txt) if down_txt.strip() else None,
+        ))
+    if not rules:
+        raise ValueError(f"no rules in {text!r}")
+    return tuple(rules)
+
+
+def load_policy(source, **globals_kw) -> CompressionPolicy:
+    """Build a policy from any of the trainer's surfaces: an existing
+    :class:`CompressionPolicy` (returned as-is), a ``.json`` file path (the
+    document's model-wide keys override ``globals_kw``), or an inline rule
+    string (``globals_kw`` supply the model-wide fields)."""
+    if isinstance(source, CompressionPolicy):
+        return source
+    if isinstance(source, CompressionConfig):
+        return CompressionPolicy.uniform(source)
+    if isinstance(source, str) and source.endswith(".json"):
+        if not os.path.exists(source):
+            raise FileNotFoundError(f"policy file {source!r} does not exist")
+        with open(source) as f:
+            return CompressionPolicy.from_json_dict(json.load(f), **globals_kw)
+    return CompressionPolicy(rules=parse_rules(source), **globals_kw)

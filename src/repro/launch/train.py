@@ -36,6 +36,7 @@ from repro.compat import shard_map
 from repro.configs import get_config, get_shape, input_specs
 from repro.core.compression import CompressionConfig
 from repro.core.diana import DianaState, aggregate_shardmap, bucket_layout
+from repro.core.policy import CompressionPolicy, load_policy, partition_for
 from repro.core.vr import VRState, resolve_vr_p
 from repro.models import init_model, train_loss
 from repro.models.sharding import GSPMDPolicy, sharding_policy
@@ -53,7 +54,7 @@ from .mesh import (
 from .sharding_rules import batch_specs, param_specs
 
 __all__ = ["build_train_step", "train_state_shardings", "init_train_state", "make_optimizer",
-           "resolve_bucketed"]
+           "resolve_bucketed", "resolve_policy_arg"]
 
 
 def resolve_bucketed(opt: "DianaOptimizer", mesh, waxes) -> "DianaOptimizer":
@@ -69,31 +70,66 @@ def resolve_bucketed(opt: "DianaOptimizer", mesh, waxes) -> "DianaOptimizer":
     nested-manual-capable toolchains keep the bucketed path.  The DOWNLINK
     flatten (core.diana.downlink_round) builds the same kind of whole-model
     buffer inside the same partial-manual body, so the downgrade forces its
-    layout per-leaf too.
+    layout per-leaf too.  For a grouped policy the downgrade applies to
+    EVERY group, both directions (``CompressionPolicy.force_perleaf``).
 
     Resolved HERE (not inside core.diana) because the choice fixes the
     DianaState layout: init and step must agree before the state is built.
     """
-    comp = opt.compression
-    dcfg = comp.down_config()
-    if not comp.bucketed and not (dcfg is not None and dcfg.bucketed):
+    pol = opt.policy
+    if not pol.any_bucketed():
         return opt
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     inner_live = any(sizes[a] > 1 for a in mesh.axis_names if a not in waxes)
     from repro.compat import supports_nested_manual
 
     if inner_live and not supports_nested_manual():
-        from dataclasses import replace as _dc_replace
-
-        comp = _dc_replace(comp, bucketed=False,
-                           down_bucketed=False if dcfg is not None else None)
-        return DianaOptimizer(comp, opt.inner, schedule=opt.schedule,
-                              regularizer=opt.regularizer)
+        return opt.replace(policy=pol.force_perleaf())
     return opt
 
 
+def resolve_policy_arg(cfg, policy) -> CompressionPolicy:
+    """The trainer's ``--comp-policy`` surface -> a concrete policy.
+
+    ``policy`` is a :class:`CompressionPolicy`, a ``.json`` file path, an
+    inline rule string (``repro.core.policy.parse_rules`` syntax), or the
+    literal ``"default"`` selecting the model's curated default
+    (``ModelConfig.comp_policy``).  The model config supplies the model-wide
+    fields (worker axes, layout default, h dtype, VR) unless a JSON document
+    overrides them.
+    """
+    if policy == "default":
+        if cfg.comp_policy is None:
+            raise ValueError(
+                f"--comp-policy default: {cfg.name} defines no default "
+                f"policy (ModelConfig.comp_policy is None)")
+        policy = cfg.comp_policy
+    return load_policy(
+        policy,
+        bucketed=cfg.comp_bucketed,
+        worker_axes=cfg.comp_worker_axes,
+        h_dtype=cfg.h_dtype,
+        vr=cfg.vr,
+        vr_p=cfg.vr_p,
+    )
+
+
 def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: float = 0.9,
-                   compression: Optional[CompressionConfig] = None) -> DianaOptimizer:
+                   compression: Optional[CompressionConfig] = None,
+                   policy=None) -> DianaOptimizer:
+    """Build the training optimizer from a model config.
+
+    ``policy`` (a :class:`CompressionPolicy` | inline rule string | ``.json``
+    path | ``"default"``) selects per-parameter-group compression; without it
+    the flat ``cfg.compression``/``comp_*`` fields build the legacy uniform
+    config (bitwise the pre-policy behaviour).
+    """
+    inner_opt = adamw() if inner == "adamw" else momentum(beta)
+    if policy is not None:
+        if compression is not None:
+            raise ValueError("pass either compression= or policy=, not both")
+        return DianaOptimizer(inner=inner_opt, schedule=constant_schedule(lr),
+                              policy=resolve_policy_arg(cfg, policy))
     comp = compression or CompressionConfig(
         method=cfg.compression,
         p=cfg.comp_p,
@@ -107,7 +143,6 @@ def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: floa
         down_method=cfg.comp_down_method,
         down_k=cfg.comp_down_k,
     )
-    inner_opt = adamw() if inner == "adamw" else momentum(beta)
     return DianaOptimizer(comp, inner_opt, schedule=constant_schedule(lr))
 
 
@@ -118,7 +153,7 @@ def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: floa
 def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_state_shape):
     """NamedSharding pytrees for (params, opt_state) — on the RESOLVED train
     mesh (see mesh.resolve_train_mesh); callers must place batches there too."""
-    mesh, waxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    mesh, waxes = resolve_train_mesh(mesh, opt.policy.worker_axes)
     opt = resolve_bucketed(opt, mesh, waxes)
     fsdp = tuple(a for a in data_axes(mesh) if a not in waxes)
     pspecs = param_specs(params_shape, cfg, mesh, fsdp_axes=fsdp)
@@ -127,7 +162,7 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
     wtuple = waxes if len(waxes) != 1 else waxes[0]
 
     vr_shard = None
-    if opt.compression.vr:
+    if opt.policy.vr:
         # VR (snapshot, mu) mirror the params' inner sharding with the worker
         # dim prepended (manual-sharded like h_worker) — fsdp axes and waxes
         # are disjoint by construction, so the specs never collide.
@@ -141,6 +176,14 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
         )
 
     msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    if not opt.policy.is_uniform:
+        diana_shard = _grouped_diana_shardings(
+            opt.policy, mesh, params_shape, pspecs, msize=msize,
+            wtuple=wtuple, waxes=waxes, vr_shard=vr_shard)
+        inner_shard = _inner_shardings(opt_state_shape.inner, p_shard, mesh)
+        return p_shard, DianaOptState(
+            step=NamedSharding(mesh, P()), inner=inner_shard, diana=diana_shard)
 
     # Downlink memory: replicated over the worker axes (server + every worker
     # evolve the same copy); the flat dim shards like the h_server analogue —
@@ -194,6 +237,43 @@ def train_state_shardings(cfg, opt: DianaOptimizer, mesh, params_shape, opt_stat
     return p_shard, opt_shard
 
 
+def _grouped_diana_shardings(pol, mesh, params_shape, pspecs, *, msize,
+                             wtuple, waxes, vr_shard):
+    """NamedSharding dicts for a grouped policy's per-group memory trees:
+    each group gets the same treatment its layout would get model-wide —
+    single flat (n, Dp_g)/(Dp_g,) buffers sharded over 'model' when the
+    group's padded size divides evenly (bucketed), per-leaf h specs derived
+    from the group's param specs otherwise; downlink memories replicated over
+    the worker axes like the uniform case."""
+    part = partition_for(pol, params_shape)
+    p_groups = part.split(params_shape)
+    pspec_groups = part.split(pspecs, is_leaf=lambda s: isinstance(s, P))
+    h_w, h_s, h_d = {}, {}, {}
+    for g, gname in enumerate(part.group_names):
+        cfg_g, leaves = part.configs[g], p_groups[g]
+        if cfg_g.bucketed:
+            dp = bucket_layout(cfg_g, leaves).padded_size
+            flat_axis = "model" if msize > 1 and dp % msize == 0 else None
+            h_w[gname] = NamedSharding(mesh, P(wtuple if waxes else None, flat_axis))
+            h_s[gname] = NamedSharding(mesh, P(flat_axis))
+        else:
+            hsp = h_flat_specs(pspec_groups[g])
+            h_w[gname] = [NamedSharding(mesh, P(wtuple if waxes else None, *s))
+                          for s in hsp]
+            h_s[gname] = [NamedSharding(mesh, s) for s in hsp]
+        dcfg = part.down_configs[g]
+        if dcfg is not None:
+            if dcfg.bucketed:
+                dpd = bucket_layout(dcfg, leaves).padded_size
+                ax = "model" if msize > 1 and dpd % msize == 0 else None
+                h_d[gname] = NamedSharding(mesh, P(ax))
+            else:
+                h_d[gname] = [NamedSharding(mesh, s)
+                              for s in h_flat_specs(pspec_groups[g])]
+    return DianaState(h_worker=h_w, h_server=h_s, vr=vr_shard,
+                      h_down=h_d if h_d else None)
+
+
 def h_flat_specs(grad_specs):
     """Per-leaf PartitionSpec for the flat DIANA memories, derived from the
     gradient specs so that each h leaf's LOCAL length equals the flattened
@@ -236,9 +316,12 @@ def _inner_shardings(inner_shape, p_shard, mesh):
 
 def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Optional[int] = None):
     """Returns a jitted ``step(params, opt_state, batch, key) -> (params, opt_state, metrics)``."""
-    mesh, waxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    mesh, waxes = resolve_train_mesh(mesh, opt.policy.worker_axes)
     opt = resolve_bucketed(opt, mesh, waxes)
-    comp = opt.compression
+    # What the aggregation round runs: the policy itself.  Uniform policies
+    # collapse inside core.diana to the flat config — the bitwise pre-policy
+    # path; grouped policies take the grouped driver.
+    comp = opt.policy
     n_workers = worker_count(mesh, waxes)
 
     from repro.compat import supports_nested_manual
@@ -391,9 +474,9 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
 # ---------------------------------------------------------------------------
 
 def init_train_state(cfg, opt: DianaOptimizer, mesh, key):
-    smesh, rwaxes = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    smesh, rwaxes = resolve_train_mesh(mesh, opt.policy.worker_axes)
     opt = resolve_bucketed(opt, smesh, rwaxes)
-    waxes = worker_axes_in(mesh, opt.compression.worker_axes)
+    waxes = worker_axes_in(mesh, opt.policy.worker_axes)
     n_workers = worker_count(mesh, waxes)
 
     params_shape = jax.eval_shape(lambda k: init_model(cfg, k), key)
@@ -431,6 +514,13 @@ def main(argv=None):
     ap.add_argument("--down-k", type=int, default=None,
                     help="kept coordinates for a sparse downlink operator "
                          "(default: --comp-k)")
+    ap.add_argument("--comp-policy", default=None,
+                    help="per-parameter-group compression policy: a policy "
+                         ".json file, inline rules "
+                         "(pattern=method[:opt=v...][/down_method...],...; "
+                         "'*' = catch-all), or 'default' for the model's "
+                         "curated ModelConfig.comp_policy.  Overrides the "
+                         "flat --compression/--comp-k/--down-* surface")
     ap.add_argument("--per-leaf-agg", action="store_true",
                     help="disable the bucketed (flat-buffer) aggregation and "
                          "compress/gather/decode each parameter leaf separately")
@@ -485,11 +575,12 @@ def main(argv=None):
         cfg = dc_replace(cfg, vr=True,
                          vr_p=resolve_vr_p(args.vr_p, m_local))
 
-    opt = make_optimizer(cfg, lr=args.lr, inner=args.inner)
+    opt = make_optimizer(cfg, lr=args.lr, inner=args.inner,
+                         policy=args.comp_policy)
     key = jax.random.PRNGKey(0)
     params, opt_state, _ = init_train_state(cfg, opt, mesh, key)
     step_fn = build_train_step(cfg, opt, mesh, shape)
-    smesh, _ = resolve_train_mesh(mesh, opt.compression.worker_axes)
+    smesh, _ = resolve_train_mesh(mesh, opt.policy.worker_axes)
 
     from repro.launch.sharding_rules import batch_specs as bspecs
 
@@ -508,7 +599,10 @@ def main(argv=None):
     if args.checkpoint_dir:
         from repro.checkpoint import save_checkpoint
 
-        save_checkpoint(args.checkpoint_dir, args.steps, {"params": params})
+        # The policy rides in the manifest metadata so a restore can rebuild
+        # the matching (possibly grouped) state template without the CLI args.
+        save_checkpoint(args.checkpoint_dir, args.steps, {"params": params},
+                        metadata={"policy": opt.policy.to_json_dict()})
         print(f"checkpoint written to {args.checkpoint_dir}")
 
 

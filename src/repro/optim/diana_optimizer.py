@@ -1,7 +1,7 @@
 """DianaOptimizer — the paper's full iterate as a composable update rule.
 
 Per step (Algorithm 1; with ``vr`` the VR-DIANA iterate of arXiv:1904.05115;
-with ``down_method`` the broadcast is downlink-compressed too — DESIGN.md
+with a downlink channel the broadcast is downlink-compressed too — DESIGN.md
 §Bidirectional):
     1. per-worker grads g_i            (caller, inside shard_map)
     2. ghat, h (+ VR snapshot, + downlink h_down) updates
@@ -13,11 +13,18 @@ This module owns steps 3-4 plus the state plumbing; step 2 lives in core so it
 can also be unit-tested single-process.  The same ``apply_direction`` is used
 by the reference/benchmark path, guaranteeing the distributed and reference
 optimizers are the same code.
+
+Compression is configured by ONE object: a
+:class:`~repro.core.policy.CompressionPolicy` (``policy=``), or — the legacy
+shim — a flat :class:`~repro.core.compression.CompressionConfig` that lifts to
+a one-rule uniform policy (bitwise the pre-policy path, DESIGN.md §Policy).
+The old ``vr``/``vr_p``/``down_method``/``down_k`` override kwargs survive as
+a deprecation shim over ``policy.replace(...)`` / ``policy.with_down(...)``.
 """
 
 from __future__ import annotations
 
-from dataclasses import replace as _dc_replace
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -25,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.compression import CompressionConfig
 from repro.core.diana import DianaState, init_state
+from repro.core.policy import CompressionPolicy, as_policy
 from repro.core.prox import Regularizer, none as no_reg
 from .optimizers import Optimizer, constant_schedule
 
@@ -38,71 +46,103 @@ class DianaOptState(NamedTuple):
 
 
 class DianaOptimizer:
-    """Bundles compression config + inner optimizer + schedule + regularizer.
+    """Bundles a compression policy + inner optimizer + schedule + regularizer.
 
-    ``vr=True`` switches the iterate to VR-DIANA: ``init`` grows the
-    per-worker L-SVRG (snapshot, mu) slot inside :class:`DianaState` and the
-    training step must feed the snapshot gradients through
-    ``aggregate_shardmap``'s ``vr_aux`` (launch/train.py does).  ``vr_p``
-    overrides the snapshot probability (None keeps the config's value or the
-    ``1/m`` default the caller resolves).
+    ``compression`` accepts the legacy flat :class:`CompressionConfig` (lifted
+    to a uniform one-rule policy — the exact pre-policy behaviour) or a
+    :class:`CompressionPolicy` directly; ``policy=`` is the explicit keyword
+    for the latter.  Passing both is an error.
 
-    ``down_method`` switches the iterate to BIDIRECTIONAL DIANA: ``init``
-    grows the downlink memory ``h_down`` inside :class:`DianaState` and the
-    training step must feed ``aggregate_shardmap`` a worker-independent
-    ``down_key`` (launch/train.py does).  ``down_k`` overrides the sparse
-    downlink budget (None inherits the config's ``k``).
+    The legacy override kwargs are a DEPRECATION SHIM over the policy API
+    (each emits a ``DeprecationWarning``; ``tests/test_policy.py`` asserts the
+    shim and the explicit policy build identical objects):
+
+    * ``vr=`` / ``vr_p=``  ->  ``policy.replace(vr=..., vr_p=...)`` — switches
+      the iterate to VR-DIANA; ``init`` grows the per-worker L-SVRG
+      (snapshot, mu) slot inside :class:`DianaState` and the training step
+      must feed the snapshot gradients through ``aggregate_shardmap``'s
+      ``vr_aux`` (launch/train.py does).
+    * ``down_method=`` / ``down_k=``  ->  ``policy.with_down(...)`` — attaches
+      a downlink channel to every rule; ``init`` grows the downlink memory
+      ``h_down`` and the training step must feed a worker-independent
+      ``down_key`` (launch/train.py does).
     """
 
     def __init__(
         self,
-        compression: CompressionConfig,
-        inner: Optimizer,
+        compression=None,
+        inner: Optimizer = None,
         schedule: Callable = None,
         regularizer: Regularizer = None,
         lr: float = 1e-3,
+        policy: Optional[CompressionPolicy] = None,
         vr: Optional[bool] = None,
         vr_p: Optional[float] = None,
         down_method: Optional[str] = None,
         down_k: Optional[int] = None,
     ):
+        if policy is not None and compression is not None:
+            raise ValueError("pass either compression= (flat config) or "
+                             "policy= (CompressionPolicy), not both")
+        if policy is None:
+            policy = as_policy(compression if compression is not None
+                               else CompressionConfig())
+        elif not isinstance(policy, CompressionPolicy):
+            policy = as_policy(policy)
         if vr is not None or vr_p is not None:
-            compression = _dc_replace(
-                compression,
-                vr=compression.vr if vr is None else vr,
-                vr_p=compression.vr_p if vr_p is None else vr_p,
+            warnings.warn(
+                "DianaOptimizer(vr=, vr_p=) is a deprecation shim — prefer "
+                "policy.replace(vr=..., vr_p=...)", DeprecationWarning,
+                stacklevel=2)
+            policy = policy.replace(
+                vr=policy.vr if vr is None else vr,
+                vr_p=policy.vr_p if vr_p is None else vr_p,
             )
         if down_method is not None or down_k is not None:
-            compression = _dc_replace(
-                compression,
-                down_method=compression.down_method if down_method is None else down_method,
-                down_k=compression.down_k if down_k is None else down_k,
-            )
-        self.compression = compression
+            warnings.warn(
+                "DianaOptimizer(down_method=, down_k=) is a deprecation shim "
+                "— prefer policy.with_down(method=..., k=...)",
+                DeprecationWarning, stacklevel=2)
+            policy = policy.with_down(method=down_method, k=down_k)
+        self.policy = policy
         self.inner = inner
         self.schedule = schedule or constant_schedule(lr)
         self.regularizer = regularizer or no_reg()
 
+    def replace(self, *, policy: CompressionPolicy) -> "DianaOptimizer":
+        """Same inner/schedule/regularizer, different policy (used by
+        ``launch.train.resolve_bucketed`` for the layout downgrade)."""
+        return DianaOptimizer(inner=self.inner, schedule=self.schedule,
+                              regularizer=self.regularizer, policy=policy)
+
+    @property
+    def compression(self) -> CompressionConfig:
+        """The legacy flat-config view: EXACT for uniform policies (the
+        round-trip law), the catch-all rule's representative view — with the
+        model-wide fields (``worker_axes``/``vr``/``h_dtype``) authoritative —
+        for grouped ones."""
+        return self.policy.representative_config()
+
     @property
     def compressor(self):
-        """The registry-resolved compression operator this optimizer runs."""
+        """The registry-resolved operator of the flat/catch-all rule."""
         return self.compression.make()
 
     @property
     def variance_reduced(self) -> bool:
         """Whether this optimizer runs the VR-DIANA iterate."""
-        return self.compression.vr
+        return self.policy.vr
 
     @property
     def bidirectional(self) -> bool:
-        """Whether the server broadcast is compressed (downlink configured)."""
-        return self.compression.bidirectional
+        """Whether any group's server broadcast is compressed."""
+        return any(r.down is not None for r in self.policy.rules)
 
     def init(self, params, n_workers: int) -> DianaOptState:
         return DianaOptState(
             step=jnp.zeros((), jnp.int32),
             inner=self.inner.init(params),
-            diana=init_state(params, self.compression, n_workers),
+            diana=init_state(params, self.policy, n_workers),
         )
 
     def refresh_snapshot(self, state: DianaOptState, params, mu) -> DianaOptState:

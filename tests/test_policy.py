@@ -1,0 +1,572 @@
+"""Compression-policy API (ISSUE 5): ChannelSpec / CompressionPolicy.
+
+The two laws this file pins:
+
+* **Back-compat law** — ``CompressionPolicy.uniform(cfg)`` IS the legacy flat
+  path: the flat config round-trips exactly, and init/reference/distributed
+  results are bitwise-identical to passing the config itself (which the rest
+  of the suite pins against the pre-policy seed behaviour), for all five
+  operators, per-leaf and bucketed, VR and downlink on/off.
+
+* **Grouped-round law** — a mixed policy (>=3 distinct operators across
+  groups) runs ``aggregate_shardmap == reference_step`` bitwise on a
+  4-worker mesh in the grouped-bucketed layout, with at most ONE
+  compress/all-gather/decode_sum per group per direction.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChannelSpec,
+    CompressionConfig,
+    CompressionPolicy,
+    Rule,
+    init_state,
+    parse_rules,
+    partition_for,
+    policy_bits_per_dim,
+    reference_init,
+    reference_step,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+METHODS = ["diana", "natural", "randk", "topk_ef", "identity"]
+
+
+def tree_eq(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def small_params():
+    return {"emb": jnp.ones((12, 4)), "w": jnp.ones((8, 8)), "b": jnp.ones((6,))}
+
+
+def small_grads(params, n, key):
+    return {
+        k: jax.random.normal(jax.random.fold_in(key, i), (n,) + v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+
+
+# ---------------------------------------------------------------------------
+# Back-compat law: uniform(cfg) == the flat path
+# ---------------------------------------------------------------------------
+
+FLAT_GRID = [
+    dict(method=m, k=4, block_size=16) for m in METHODS
+] + [
+    dict(method="diana", block_size=16, bucketed=True),
+    dict(method="topk_ef", k=4, bucketed=True),
+    dict(method="randk", k=4, down_method="natural"),
+    dict(method="diana", block_size=16, down_method="topk_ef", down_k=3,
+         down_bucketed=True, bucketed=True),
+    dict(method="natural", vr=True, vr_p=0.5),
+    dict(method="diana", block_size=16, p=2.0, alpha=0.125, use_kernel=False,
+         h_dtype=jnp.bfloat16, worker_axes=("data",)),
+]
+
+
+@pytest.mark.parametrize("kw", FLAT_GRID, ids=lambda kw: "-".join(
+    f"{k}={v}" for k, v in kw.items() if k != "h_dtype"))
+def test_uniform_flat_config_roundtrip(kw):
+    """uniform(cfg).flat_config() == cfg for the whole flat surface — the
+    precondition for the uniform policy reaching the identical code path."""
+    cfg = CompressionConfig(**kw)
+    pol = CompressionPolicy.uniform(cfg)
+    assert pol.is_uniform
+    assert pol.flat_config() == cfg
+    # the memoized compressor cache sees ONE config object
+    assert pol.flat_config().make() is cfg.make()
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("bucketed", [False, True])
+def test_uniform_reference_bitwise(method, bucketed):
+    """reference_step(policy) == reference_step(flat cfg) bitwise: v and every
+    state leaf — per operator, both layouts."""
+    cfg = CompressionConfig(method=method, k=4, block_size=16, bucketed=bucketed)
+    pol = CompressionPolicy.uniform(cfg)
+    params = small_params()
+    key = jax.random.PRNGKey(3)
+    grads = small_grads(params, 4, key)
+
+    s_cfg = reference_init(params, cfg, 4)
+    s_pol = reference_init(params, pol, 4)
+    tree_eq(s_cfg, s_pol)
+    assert jax.tree_util.tree_structure(s_cfg) == jax.tree_util.tree_structure(s_pol)
+
+    v_cfg, s_cfg = reference_step(grads, s_cfg, key, cfg, beta=0.9)
+    v_pol, s_pol = reference_step(grads, s_pol, key, pol, beta=0.9)
+    tree_eq(v_cfg, v_pol)
+    tree_eq(s_cfg, s_pol)
+
+
+@pytest.mark.parametrize("extra", [
+    dict(vr=True, vr_p=0.5),
+    dict(down_method="natural"),
+    dict(down_method="topk_ef", down_k=3, vr=True, vr_p=0.5),
+], ids=["vr", "down", "vr+down"])
+@pytest.mark.parametrize("bucketed", [False, True])
+def test_uniform_reference_bitwise_vr_downlink(extra, bucketed):
+    """The law extends to VR and downlink composition (both layouts)."""
+    cfg = CompressionConfig(method="diana", block_size=16, bucketed=bucketed,
+                            **extra)
+    pol = CompressionPolicy.uniform(cfg)
+    params = small_params()
+    key = jax.random.PRNGKey(5)
+    grads = small_grads(params, 4, key)
+    kwargs = {}
+    if cfg.vr:
+        g_snap = small_grads(params, 4, jax.random.fold_in(key, 99))
+        kwargs = dict(vr_aux=(g_snap, grads), params=params)
+
+    s_cfg = reference_init(params, cfg, 4)
+    s_pol = reference_init(params, pol, 4)
+    v_cfg, s_cfg = reference_step(grads, s_cfg, key, cfg, **kwargs)
+    v_pol, s_pol = reference_step(grads, s_pol, key, pol, **kwargs)
+    tree_eq(v_cfg, v_pol)
+    tree_eq(s_cfg, s_pol)
+
+
+def test_uniform_init_state_layout_identical():
+    """init_state under a uniform policy keeps the legacy tree STRUCTURE
+    (not just values) — existing checkpoints restore unchanged."""
+    params = small_params()
+    for kw in (dict(method="diana", block_size=16),
+               dict(method="diana", block_size=16, bucketed=True,
+                    down_method="natural")):
+        cfg = CompressionConfig(**kw)
+        a = init_state(params, cfg, 4)
+        b = init_state(params, CompressionPolicy.uniform(cfg), 4)
+        assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+        tree_eq(a, b)
+
+
+# ---------------------------------------------------------------------------
+# DianaOptimizer: policy= argument, deprecation shim equivalence
+# ---------------------------------------------------------------------------
+
+def test_optimizer_shim_equals_policy_api():
+    """The legacy vr/vr_p/down_method/down_k kwargs build the IDENTICAL
+    policy as the explicit policy.replace/with_down calls, with a
+    DeprecationWarning."""
+    from repro.optim import DianaOptimizer, momentum
+
+    cfg = CompressionConfig(method="diana", block_size=16)
+    with pytest.deprecated_call():
+        shim = DianaOptimizer(cfg, momentum(0.9), vr=True, vr_p=0.25,
+                              down_method="natural", down_k=8)
+    explicit = DianaOptimizer(
+        inner=momentum(0.9),
+        policy=CompressionPolicy.uniform(cfg)
+        .replace(vr=True, vr_p=0.25)
+        .with_down(method="natural", k=8),
+    )
+    assert shim.policy == explicit.policy
+    assert shim.variance_reduced and shim.bidirectional
+    # the shimmed policy still collapses to a flat config (uniform)
+    flat = shim.policy.flat_config()
+    assert flat.vr and flat.vr_p == 0.25
+    assert flat.down_method == "natural" and flat.down_k == 8
+
+
+def test_optimizer_rejects_both_surfaces():
+    from repro.optim import DianaOptimizer, momentum
+
+    cfg = CompressionConfig()
+    with pytest.raises(ValueError):
+        DianaOptimizer(cfg, momentum(0.9),
+                       policy=CompressionPolicy.uniform(cfg))
+
+
+def test_optimizer_compression_property_roundtrips():
+    from repro.optim import DianaOptimizer, momentum
+
+    cfg = CompressionConfig(method="randk", k=8, bucketed=True)
+    opt = DianaOptimizer(cfg, momentum(0.9))
+    assert opt.compression == cfg
+    assert opt.policy.is_uniform
+
+
+# ---------------------------------------------------------------------------
+# Matching + partition semantics
+# ---------------------------------------------------------------------------
+
+def test_first_match_wins_and_order_stable():
+    pol = CompressionPolicy(rules=(
+        Rule("^emb$", ChannelSpec(method="topk_ef", k=4)),
+        Rule("emb|w", ChannelSpec(method="natural")),
+        Rule(".*", ChannelSpec(method="diana", block_size=16)),
+    ))
+    assert pol.match("emb") == 0       # first match, not best match
+    assert pol.match("w") == 1
+    assert pol.match("b") == 2
+    part = partition_for(pol, small_params())
+    assert part.group_names == ("g00_topk_ef", "g01_natural", "g02_ternary")
+    assert [len(ids) for ids in part.group_leaf_ids] == [1, 1, 1]
+
+
+def test_unmatched_leaf_raises():
+    pol = CompressionPolicy(rules=(Rule("^emb$", ChannelSpec()),))
+    with pytest.raises(KeyError, match="catch-all"):
+        partition_for(pol, small_params())
+
+
+def test_partition_split_merge_roundtrip():
+    pol = CompressionPolicy(rules=parse_rules("emb=natural,*=diana:block=16"))
+    params = small_params()
+    part = partition_for(pol, params)
+    merged = part.merge(part.split(params))
+    assert jax.tree_util.tree_structure(merged) == jax.tree_util.tree_structure(params)
+    tree_eq(merged, params)
+
+
+def test_rule_config_inheritance():
+    """Unset spec knobs inherit flat defaults; down specs inherit the uplink
+    spec first (the legacy down_k-inherits-k semantics)."""
+    pol = CompressionPolicy(rules=(
+        Rule(".*", ChannelSpec(method="randk", k=8),
+             down=ChannelSpec(method="topk_ef")),
+    ), bucketed=True)
+    up = pol.rule_config(0)
+    down = pol.rule_down_config(0)
+    assert up.k == 8 and up.bucketed and up.block_size == 2048
+    assert down.method == "topk_ef" and down.k == 8 and down.bucketed
+    # layouts can diverge per direction
+    pol2 = CompressionPolicy(rules=(
+        Rule(".*", ChannelSpec(method="randk", k=8),
+             down=ChannelSpec(method="topk_ef", layout="perleaf")),
+    ), bucketed=True)
+    assert pol2.rule_config(0).bucketed
+    assert not pol2.rule_down_config(0).bucketed
+
+
+def test_force_perleaf_downgrade():
+    pol = CompressionPolicy(rules=parse_rules(
+        "emb=topk_ef:k=4:layout=bucketed,*=diana/natural"), bucketed=True)
+    assert pol.any_bucketed()
+    down = pol.force_perleaf()
+    assert not down.any_bucketed()
+    # uniform policies keep the legacy downgrade semantics bitwise
+    cfg = CompressionConfig(method="diana", bucketed=True, down_method="natural")
+    flat_down = CompressionPolicy.uniform(cfg).force_perleaf().flat_config()
+    assert flat_down.bucketed is False and flat_down.down_bucketed is False
+
+
+# ---------------------------------------------------------------------------
+# Inline syntax + JSON serialization
+# ---------------------------------------------------------------------------
+
+def test_parse_rules_inline_syntax():
+    rules = parse_rules(
+        "scale$|bias=identity,emb=topk_ef:k=256,"
+        "*=diana:block=1024:p=inf/natural:alpha=0.5")
+    assert rules[0] == Rule("scale$|bias", ChannelSpec(method="identity"))
+    assert rules[1] == Rule("emb", ChannelSpec(method="topk_ef", k=256))
+    assert rules[2].pattern == ".*" and rules[2].is_catch_all
+    assert rules[2].spec == ChannelSpec(method="diana", block_size=1024,
+                                        p=math.inf)
+    assert rules[2].down == ChannelSpec(method="natural", alpha=0.5)
+
+
+def test_parse_rules_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_rules("no_equals_sign")
+    with pytest.raises(ValueError):
+        parse_rules("*=diana:frobnicate=3")
+    with pytest.raises(KeyError):
+        parse_rules("*=made_up_method")
+
+
+def test_json_roundtrip_and_file_loading(tmp_path):
+    from repro.core import load_policy
+
+    pol = CompressionPolicy(
+        rules=parse_rules("emb=topk_ef:k=4,*=diana:block=16/natural"),
+        bucketed=True, vr=True, vr_p=0.25, worker_axes=("data",))
+    assert CompressionPolicy.from_json(pol.to_json()) == pol
+
+    path = tmp_path / "policy.json"
+    path.write_text(pol.to_json())
+    loaded = load_policy(str(path))
+    assert loaded == pol
+    # inline strings load too, with globals supplied by the caller
+    inline = load_policy("*=diana:block=16", bucketed=True)
+    assert inline.bucketed and inline.rules[0].spec.block_size == 16
+
+
+def test_policy_bits_per_dim_weighted():
+    """Size-weighted mean across groups matches the hand computation."""
+    params = {"a": jnp.ones((100,)), "b": jnp.ones((300,))}
+    pol = CompressionPolicy(rules=parse_rules("^a$=none,*=topk_ef:k=30"))
+    per_dim = policy_bits_per_dim(pol, params)
+    # identity: 32 bits/dim on 100; topk: (32+16)*30/300 bits/dim on 300
+    expect = (32.0 * 100 + (32 + 16) * 30.0 / 300 * 300) / 400
+    assert per_dim == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# tools/check_policy.py linter
+# ---------------------------------------------------------------------------
+
+def test_check_policy_repo_defaults_clean():
+    """Every arch default policy parses, resolves and covers its model —
+    the CI step, run in-process."""
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import check_policy
+        assert check_policy.main([]) == 0
+    finally:
+        sys.path.pop(0)
+
+
+def test_check_policy_catches_structural_rot():
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import check_policy
+
+        # no catch-all
+        assert check_policy.main(["emb=diana", "--no-models"]) == 1
+        # two catch-alls
+        assert check_policy.main(["*=diana,*=natural", "--no-models"]) == 1
+        # catch-all not last (dead rule)
+        assert check_policy.main(["*=diana,emb=natural", "--no-models"]) == 1
+        # unknown method / broken regex do not crash the linter
+        assert check_policy.main(["*=frobnicate", "--no-models"]) == 1
+        assert check_policy.main(["(((=diana,*=diana", "--no-models"]) == 1
+        # and a clean one passes
+        assert check_policy.main(["emb=natural,*=diana", "--no-models"]) == 0
+    finally:
+        sys.path.pop(0)
+
+
+# ---------------------------------------------------------------------------
+# Grouped state: checkpointing with policy metadata
+# ---------------------------------------------------------------------------
+
+def test_grouped_state_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_metadata, restore_checkpoint, save_checkpoint
+
+    pol = CompressionPolicy(
+        rules=parse_rules("^b$=identity,emb=topk_ef:k=4,*=diana:block=16"),
+        bucketed=True)
+    params = small_params()
+    key = jax.random.PRNGKey(0)
+    state = reference_init(params, pol, 4)
+    _, state = reference_step(small_grads(params, 4, key), state, key, pol)
+
+    save_checkpoint(str(tmp_path), 1, {"diana": state},
+                    metadata={"policy": pol.to_json_dict()})
+    restored, step = restore_checkpoint(str(tmp_path), {"diana": state})
+    assert step == 1
+    tree_eq(restored["diana"], state)
+    # the serialized policy rebuilds EQUAL — enough to re-derive the grouped
+    # state template on restore
+    meta = load_metadata(str(tmp_path))
+    assert CompressionPolicy.from_json_dict(meta["policy"]) == pol
+
+
+def test_sortfree_topk_matches_lax_topk():
+    """The partial-manual top-k fallback selects the IDENTICAL set as
+    lax.top_k, ties and zeros included (the decode is order-invariant)."""
+    from repro.core.compressors.topk_ef import _select_topk_sortfree
+
+    key = jax.random.PRNGKey(0)
+    d = 97
+    for trial in range(24):
+        k2 = jax.random.fold_in(key, trial)
+        kk = int(jax.random.randint(jax.random.fold_in(k2, 1), (), 1, d + 1))
+        x = jax.random.normal(jax.random.fold_in(k2, 2), (d,))
+        if trial % 3 == 0:
+            x = jnp.round(x * 2) / 2  # force ties (and zeros)
+        a = np.sort(np.asarray(_select_topk_sortfree(jnp.abs(x), kk)))
+        b = np.sort(np.asarray(jax.lax.top_k(jnp.abs(x), kk)[1]))
+        np.testing.assert_array_equal(a, b, err_msg=f"trial={trial} k={kk}")
+    a = np.sort(np.asarray(_select_topk_sortfree(jnp.zeros((d,)), 5)))
+    np.testing.assert_array_equal(a, np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# The grouped-round law: mixed policy on a real 4-worker mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+def run_py(code: str, timeout=900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+MESH_COMMON = """
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import (CompressionPolicy, parse_rules, init_state,
+                        reference_init, reference_step, DianaState)
+from repro.core.diana import aggregate_shardmap, DOWN_FOLD
+from repro.launch.mesh import make_mesh
+
+n = 4
+params = {"emb": jnp.ones((32, 8)), "w1": jnp.ones((16, 16)),
+          "w2": jnp.ones((16, 16)), "norm": jnp.ones((16,)), "b": jnp.ones((8,))}
+key = jax.random.PRNGKey(7)
+grads = {k: jax.random.normal(jax.random.fold_in(key, i), (n,) + v.shape)
+         for i, (k, v) in enumerate(params.items())}
+tmap = jax.tree_util.tree_map
+
+def dist_outputs(pol):
+    mesh = make_mesh((n, 1), ("data", "model"))
+    state = init_state(params, pol, n)
+    def body(gs, h_w, h_s, h_d, k):
+        g_local = tmap(lambda g: g[0], gs)
+        wkey = jax.random.fold_in(k, jax.lax.axis_index("data"))
+        ghat, new = aggregate_shardmap(
+            g_local, DianaState(h_w, h_s, None, h_d), wkey, pol,
+            axis_names=("data",), n_workers=n,
+            down_key=jax.random.fold_in(k, DOWN_FOLD))
+        return ghat, new.h_worker, new.h_server, new.h_down
+    hd_spec = tmap(lambda _: P(), state.h_down)
+    fn = shard_map(body, mesh=mesh,
+        in_specs=(tmap(lambda _: P("data"), grads),
+                  tmap(lambda _: P("data"), state.h_worker),
+                  tmap(lambda _: P(), state.h_server), hd_spec, P()),
+        out_specs=(tmap(lambda _: P(), params),
+                   tmap(lambda _: P("data"), state.h_worker),
+                   tmap(lambda _: P(), state.h_server), hd_spec),
+        axis_names={"data"}, check_vma=False)
+    return fn, jax.jit(fn)(grads, state.h_worker, state.h_server,
+                           state.h_down, key), state
+"""
+
+
+def test_mixed_policy_distributed_matches_reference_bitwise():
+    """ISSUE 5 acceptance: >=4 distinct operators across groups, grouped-
+    bucketed layout, downlink on one group — aggregate_shardmap ==
+    reference_step BITWISE (ghat, h_worker, h_server, h_down), with exactly
+    ONE all-gather per group (per uplink direction)."""
+    code = MESH_COMMON + """
+pol = CompressionPolicy(
+    rules=parse_rules("^norm$|^b$=natural,^emb$=topk_ef:k=16,"
+                      "^w2$=randk:k=8/natural,*=diana:block=16"),
+    bucketed=True)
+fn, (ghat, hw, hs, hd), state = dist_outputs(pol)
+rstate = reference_init(params, pol, n)
+v, rs2 = reference_step(grads, rstate, key, pol)
+
+def eq(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+eq(v, ghat); eq(rs2.h_worker, hw); eq(rs2.h_server, hs); eq(rs2.h_down, hd)
+
+def count(jaxpr, names, acc=None):
+    acc = {} if acc is None else acc
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in names:
+            acc[eqn.primitive.name] = acc.get(eqn.primitive.name, 0) + 1
+        for x in eqn.params.values():
+            for y in (x if isinstance(x, (list, tuple)) else [x]):
+                inner = getattr(y, "jaxpr", None)
+                if inner is not None: count(inner, names, acc)
+                elif hasattr(y, "eqns"): count(y, names, acc)
+    return acc
+jx = jax.make_jaxpr(fn)(grads, state.h_worker, state.h_server, state.h_down, key)
+c = count(jx.jaxpr, ("all_gather",))
+assert len(state.h_worker) == 4, list(state.h_worker)
+print(json.dumps({"groups": sorted(state.h_worker), "gathers": c.get("all_gather", 0)}))
+"""
+    out = json.loads(run_py(code).strip().splitlines()[-1])
+    assert out["groups"] == ["g00_natural", "g01_topk_ef", "g02_randk",
+                             "g03_ternary"]
+    # one fused gather per group — the grouped BucketLayout invariant
+    assert out["gathers"] == 4, out
+
+
+def test_mixed_policy_with_identity_group_close():
+    """Identity groups keep their pmean fast path (documented exemption from
+    the bitwise contract) — the merged result still matches the reference to
+    f32 tolerance, and the identity leaves are EXACT zero-error means."""
+    code = MESH_COMMON + """
+pol = CompressionPolicy(
+    rules=parse_rules("^norm$|^b$=identity,^emb$=topk_ef:k=16,*=diana:block=16"),
+    bucketed=True)
+fn, (ghat, hw, hs, hd), state = dist_outputs(pol)
+rstate = reference_init(params, pol, n)
+v, rs2 = reference_step(grads, rstate, key, pol)
+for k2 in ("norm", "b"):
+    np.testing.assert_allclose(np.asarray(ghat[k2]),
+                               np.asarray(grads[k2].mean(0)), rtol=1e-6)
+for x, y in zip(jax.tree_util.tree_leaves(v), jax.tree_util.tree_leaves(ghat)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6, atol=1e-7)
+# the compressed groups stay bitwise
+np.testing.assert_array_equal(np.asarray(v["emb"]), np.asarray(ghat["emb"]))
+np.testing.assert_array_equal(np.asarray(v["w1"]), np.asarray(ghat["w1"]))
+print("ok")
+"""
+    run_py(code)
+
+
+def test_trainer_runs_grouped_default_policy():
+    """make_optimizer(policy='default') trains llama-reduced end-to-end on a
+    4-worker mesh: grouped h state, decreasing loss, and the policy survives
+    resolve_bucketed's downgrade on a live-model-axis mesh."""
+    code = """
+import jax, jax.numpy as jnp, json
+from jax.sharding import NamedSharding
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_mesh, resolve_train_mesh
+from repro.launch.train import (build_train_step, init_train_state,
+                                make_optimizer, resolve_bucketed)
+from repro.launch.sharding_rules import batch_specs
+from repro.data import make_lm_batch
+
+cfg = reduced(get_config("llama3.2-1b"))
+shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+mesh = make_mesh((4, 1), ("data", "model"))
+opt = make_optimizer(cfg, lr=0.02, policy="default")
+assert not opt.policy.is_uniform
+key = jax.random.PRNGKey(0)
+params, opt_state, _ = init_train_state(cfg, opt, mesh, key)
+groups = sorted(opt_state.diana.h_worker)
+step_fn = build_train_step(cfg, opt, mesh, shape)
+smesh, _ = resolve_train_mesh(mesh, opt.policy.worker_axes)
+losses = []
+for step in range(6):
+    hb = make_lm_batch(cfg, shape, step)
+    bs = batch_specs(hb, smesh)
+    batch = jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, NamedSharding(smesh, s)), hb, bs)
+    params, opt_state, m = step_fn(params, opt_state, batch,
+                                   jax.random.fold_in(key, step))
+    losses.append(float(m["loss"]))
+h_sum = float(sum(jnp.abs(l).sum()
+                  for l in jax.tree_util.tree_leaves(opt_state.diana.h_worker)))
+
+# live model axis: the downgrade forces every group per-leaf on this toolchain
+mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+smesh3, rw3 = resolve_train_mesh(mesh3, opt.policy.worker_axes)
+from repro.compat import supports_nested_manual
+downgraded = not resolve_bucketed(opt, smesh3, rw3).policy.any_bucketed()
+assert downgraded == (not supports_nested_manual())
+print(json.dumps({"groups": groups, "losses": losses, "h_sum": h_sum}))
+"""
+    out = json.loads(run_py(code).strip().splitlines()[-1])
+    assert out["groups"] == ["g00_identity", "g01_topk_ef", "g02_ternary"]
+    assert out["losses"][-1] < out["losses"][0], out
+    assert out["h_sum"] > 0

@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Policy linter: every compression policy in the repo is well-formed.
+
+Run as a CI step (and as a tier-1 test via ``tests/test_policy.py``) so the
+policy surfaces can never silently rot:
+
+1. **Structural checks** on every policy source — each registered arch's
+   ``ModelConfig.comp_policy`` default plus any ``.json`` / inline-rule
+   arguments passed on the command line:
+
+   * every rule's ``method`` resolves in the compressor registry (including
+     downlink channels),
+   * every ``pattern`` is a valid regex,
+   * exactly ONE rule is a catch-all (``*`` / ``.*`` / empty), and it is the
+     LAST rule — so matching is total and no rule is dead by position.
+
+2. **Coverage checks** (``--no-models`` skips them) — each arch default is
+   checked against the arch's actual REDUCED parameter tree via
+   ``jax.eval_shape`` (metadata only, no compute): every rule must own at
+   least one leaf under first-match semantics, otherwise the pattern has
+   rotted against the model code (e.g. a renamed layer) and the policy is
+   not doing what it says.
+
+Exit code 0 = clean; 1 = any finding, each printed as ``source: message``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def structural_errors(source: str, policy) -> list:
+    """Catch-all discipline (method/regex validity already raised at parse)."""
+    errors = []
+    catch = [i for i, r in enumerate(policy.rules) if r.is_catch_all]
+    if len(catch) != 1:
+        errors.append(
+            f"{source}: expected exactly one catch-all rule ('*'), found "
+            f"{len(catch)} (patterns: {[r.pattern for r in policy.rules]})")
+    elif catch[0] != len(policy.rules) - 1:
+        errors.append(
+            f"{source}: the catch-all rule must be LAST (it is rule "
+            f"{catch[0]} of {len(policy.rules)}; later rules are dead)")
+    return errors
+
+
+def load_source(source: str):
+    """``(policy, errors)`` from a .json path or an inline rule string."""
+    from repro.core.policy import load_policy
+
+    try:
+        return load_policy(source), []
+    except Exception as e:
+        return None, [f"{source}: does not parse ({type(e).__name__}: {e})"]
+
+
+def coverage_errors(arch: str, policy) -> list:
+    """Every rule of an arch default owns >= 1 leaf of the arch's tree."""
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.core.policy import partition_for, tree_paths
+    from repro.models import init_model
+
+    cfg = reduced(get_config(arch))
+    shapes = jax.eval_shape(
+        lambda k: init_model(cfg, k), jax.ShapeDtypeStruct((2,), "uint32"))
+    errors = []
+    try:
+        part = partition_for(policy, shapes)
+    except KeyError as e:  # unmatched leaf — impossible with a catch-all
+        return [f"{arch}: {e}"]
+    owned = set(part.rule_ids)
+    for i, rule in enumerate(policy.rules):
+        if i not in owned:
+            errors.append(
+                f"{arch}: rule {i} ({rule.pattern!r} -> {rule.spec.method}) "
+                f"matches no parameter leaf (paths: "
+                f"{sorted(set(p.rsplit('/', 1)[-1] for p in tree_paths(shapes)))})")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("sources", nargs="*",
+                    help="extra policy sources to lint: .json files or "
+                         "inline rule strings")
+    ap.add_argument("--no-models", action="store_true",
+                    help="skip the arch-tree coverage checks (no jax import)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import list_archs
+    from repro.configs.base import get_config
+
+    errors = []
+    for arch in list_archs():
+        text = get_config(arch).comp_policy
+        if text is None:
+            continue
+        policy, arch_errs = load_source(text)
+        if policy is not None:
+            arch_errs += structural_errors(text, policy)
+            if not args.no_models and not arch_errs:
+                arch_errs += coverage_errors(arch, policy)
+        errors += [e.replace(text, f"{arch}.comp_policy", 1) for e in arch_errs]
+
+    for source in args.sources:
+        policy, errs = load_source(source)
+        errors += errs
+        if policy is not None:
+            errors += structural_errors(source, policy)
+
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"check_policy: {len(errors)} finding(s)", file=sys.stderr)
+        return 1
+    print("check_policy: all policies parse, resolve and cover their models")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
