@@ -20,6 +20,15 @@ configs, the downlink operator's rate for bidirectional rows, DESIGN.md
 a bidirectional ``diana+down`` row so the uplink-vs-total trade-off is part
 of the committed trajectory.
 
+Each row also carries ``fraction_of_roofline_{perleaf,bucketed}``: the
+ANALYTIC minimum memory traffic of one aggregation round (grads read, worker
+memory read+write, wire payload, server memory + ghat — a floor, not the
+achieved traffic) divided by measured time x the MEASURED streaming peak from
+:func:`benchmarks.roofline.measure_peak_bandwidth` (memoized, so every row
+divides by the same number).  It answers "how far is this step from pure
+bandwidth-bound data movement" — on CPU CI with interpreted kernels it is a
+trajectory signal, on TPU a real roofline fraction.
+
 Run directly (``python -m benchmarks.bench_step_time [--smoke]``) or via
 ``benchmarks.run``.  ``--smoke`` cuts steps/reps for CI but keeps the full
 size x operator grid, so the uploaded artifact always satisfies the >= 2
@@ -213,6 +222,7 @@ def collect(smoke: bool = False):
                     lay = bucket_layout(cfg_b, params)
                     n_params, n_leaves = lay.size, lay.n_leaves
                     up_bits, down_bits = _direction_bits(cfg_b, params, lay)
+                floor_bytes = _round_bytes_floor(n_params, up_bits, down_bits)
                 rows.append({
                     "size": size_name,
                     "n_params": n_params,
@@ -226,8 +236,34 @@ def collect(smoke: bool = False):
                     "uplink_bits_per_dim": round(up_bits, 4),
                     "downlink_bits_per_dim": round(down_bits, 4),
                     "bits_per_dim_total": round(up_bits + down_bits, 4),
+                    "fraction_of_roofline_perleaf": _roofline_fraction(
+                        floor_bytes, cell.get("perleaf")),
+                    "fraction_of_roofline_bucketed": _roofline_fraction(
+                        floor_bytes, cell.get("bucketed")),
                 })
     return rows
+
+
+def _round_bytes_floor(n_params: int, up_bits: float, down_bits: float) -> float:
+    """Analytic minimum memory traffic of ONE n-worker aggregation round, in
+    bytes: per worker, read the gradient and read+write the DIANA memory
+    (3 x 4 bytes/dim); the server reads every worker's wire payload and the
+    downlink broadcast payload, and reads+writes its own memory plus the ghat
+    output (3 x 4 bytes/dim).  A floor — intermediates, padding and collective
+    staging all add traffic on top."""
+    per_worker = 3 * 4 * n_params + up_bits / 8 * n_params
+    server = 3 * 4 * n_params + down_bits / 8 * n_params
+    return N_WORKERS * per_worker + server
+
+
+def _roofline_fraction(nbytes: float, us):
+    """``nbytes`` over measured time x the MEASURED peak (memoized in
+    :mod:`benchmarks.roofline` — the same denominator as BENCH_roofline.json)."""
+    if not us:
+        return None
+    from benchmarks.roofline import measure_peak_bandwidth
+
+    return round(nbytes / (us * 1e-6) / measure_peak_bandwidth(), 6)
 
 
 def _direction_bits(cfg, params, lay):

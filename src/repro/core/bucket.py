@@ -278,6 +278,9 @@ class BucketedCompressor(Compressor):
     def decode_sum(self, gathered: Payload, n: int, d: Optional[int] = None) -> jax.Array:
         return self.base.decode_sum_bucketed(self.layout, gathered, n)
 
+    def decode_sum_apply(self, gathered: Payload, n: int, d, h_server):
+        return self.base.decode_sum_apply_bucketed(self.layout, gathered, n, h_server)
+
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         """Size-weighted mean of the per-leaf costs (honest accounting: the
         sparse operators' cost depends on each leaf's length)."""

@@ -95,6 +95,10 @@ class Compressor:
     use_kernel:     this instance routes its hot paths through Pallas kernels
                     (a capability the compressor itself advertises — consumers
                     never switch on an external flag)
+    kernel_oracle:  ``"module::symbol"`` naming the pure-jnp interpret-mode
+                    oracle its kernels are validated against (every concrete
+                    operator must declare one — ``tools/check_kernels.py``
+                    lints this and the tests import through it)
     prefers_allreduce: the payload IS the dense vector and no state is
                     carried, so a distributed mean should lower to one fused
                     all-reduce (pmean) instead of gather + decode.  The
@@ -116,6 +120,7 @@ class Compressor:
     unbiased: bool = True
     carries_state: bool = False
     use_kernel: bool = False
+    kernel_oracle: Optional[str] = None
     prefers_allreduce: bool = False
     replicate_perleaf: bool = False
 
@@ -142,6 +147,23 @@ class Compressor:
         for i in range(1, n):
             acc = acc + self.decode(gathered.select(i), d)
         return acc
+
+    def decode_sum_apply(
+        self, gathered: Payload, n: int, d: int, h_server: jax.Array
+    ):
+        """The fused server tail: decode_sum, mean, direction and memory
+        update in ONE hook — ``(ghat, new_h)`` with ``dm = decode_sum / n``,
+        ``ghat = server_direction(h, dm)``, ``new_h = next_server_memory``.
+
+        Default: the literal composition of the existing hooks (bitwise
+        reference semantics).  Kernel-backed operators override this so the
+        aggregated sum never round-trips HBM between decode and apply — the
+        epilogue runs on the accumulator tile inside the decode kernel.
+        """
+        dm = self.decode_sum(gathered, n, d) / n
+        return self.server_direction(h_server, dm), self.next_server_memory(
+            h_server, dm
+        )
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         """Logical wire cost per coordinate (``d`` = vector length, needed by
@@ -256,6 +278,24 @@ class Compressor:
         for i in range(1, n):
             acc = acc + self.decode_bucketed(layout, gathered.select(i))
         return acc
+
+    def decode_sum_apply_bucketed(
+        self, layout, gathered: Payload, n: int, h_server: jax.Array
+    ):
+        """Bucketed counterpart of :meth:`decode_sum_apply` on the padded flat
+        buffer.  The default composes the bucketed hooks with the same memory
+        dispatch as :class:`repro.core.bucket.BucketedCompressor`: an operator
+        that overrides :meth:`next_server_memory` (error feedback) keeps its
+        own rule, otherwise the alpha rule runs with :meth:`bucketed_alpha`
+        (scalar or per-segment vector).  Kernel-backed operators override this
+        with the fused decode+apply kernel."""
+        dm = self.decode_sum_bucketed(layout, gathered, n) / n
+        ghat = self.server_direction(h_server, dm)
+        if type(self).next_server_memory is not Compressor.next_server_memory:
+            return ghat, self.next_server_memory(h_server, dm)
+        if not self.carries_state:
+            return ghat, h_server
+        return ghat, h_server + self.bucketed_alpha(layout) * dm
 
     def bucketed_alpha(self, layout):
         """Per-coordinate memory rate over the padded flat buffer.

@@ -4,6 +4,14 @@ Ships the dense vector in ``Payload.values``.  Running the baseline through
 the same compress -> gather -> decode_sum pipeline as every real operator
 keeps the aggregation loop branch-free and makes the 32-bits/dim row of the
 trade-off benchmarks an honest apples-to-apples measurement.
+
+Kernel capability: with ``use_kernel=True`` the payload passes through
+``dense_copy`` and the server mean through the streaming
+``dense_decode_sum(_mean)`` accumulator — trivially bitwise-equal, but it
+means the full registry satisfies the one capability matrix
+(``tools/check_kernels.py``) with no special cases, and the identity rows of
+the roofline benchmark measure the same kernel plumbing as the real
+operators.  Interpret-contract only; auto resolves to off.
 """
 
 from __future__ import annotations
@@ -22,14 +30,41 @@ class IdentityCompressor(Compressor):
     name = "identity"
     unbiased = True
     carries_state = False
+    kernel_oracle = "repro.kernels.ref::ref_dense_decode_sum"
     prefers_allreduce = True  # dense payload: one pmean beats gather+decode
+
+    def __init__(self, *, use_kernel: Optional[bool] = None):
+        # Dense kernels are interpret-contract only: auto resolves to off.
+        self.use_kernel = bool(use_kernel) if use_kernel is not None else False
+
+    def _values(self, delta: jax.Array) -> jax.Array:
+        x = delta.astype(jnp.float32)
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            return _kops.dense_copy_op(x)
+        return x
 
     def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
         del key
-        return Payload(values=delta.astype(jnp.float32))
+        return Payload(values=self._values(delta))
 
     def decode(self, payload: Payload, d: int) -> jax.Array:
         return payload.values[:d]
+
+    def decode_sum(self, gathered: Payload, n: int, d: int) -> jax.Array:
+        if not self.use_kernel:
+            return super().decode_sum(gathered, n, d)
+        from repro.kernels import ops as _kops
+
+        return _kops.dense_decode_sum_op(gathered.values[:, :d])
+
+    def decode_sum_apply(self, gathered: Payload, n: int, d: int, h_server):
+        if not self.use_kernel:
+            return super().decode_sum_apply(gathered, n, d, h_server)
+        from repro.kernels import ops as _kops
+
+        return _kops.dense_decode_sum_mean_op(gathered.values[:, :d]), h_server
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         return 32.0
@@ -38,7 +73,17 @@ class IdentityCompressor(Compressor):
 
     def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
         del key
-        return Payload(values=delta.astype(jnp.float32))
+        return Payload(values=self._values(delta))
 
     def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
         return payload.values
+
+    def decode_sum_bucketed(self, layout, gathered: Payload, n: int) -> jax.Array:
+        if not self.use_kernel:
+            return super().decode_sum_bucketed(layout, gathered, n)
+        return self.decode_sum(gathered, n, layout.padded_size)
+
+    def decode_sum_apply_bucketed(self, layout, gathered, n, h_server):
+        if not self.use_kernel:
+            return super().decode_sum_apply_bucketed(layout, gathered, n, h_server)
+        return self.decode_sum_apply(gathered, n, layout.padded_size, h_server)

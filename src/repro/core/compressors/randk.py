@@ -11,10 +11,27 @@ The values travel UNscaled; the ``d/k`` correction is applied at decode where
 memory rate ``alpha = 1/(1 + omega) = k/d`` (per leaf) plugs the operator into
 DIANA's memory loop as in Horvath et al. 2019 (arXiv:1904.05115).
 
+Subset selection is ``top_k`` over iid uint32 tags (:func:`_uniform_subset`)
+— any tie-free random total order induces a uniform k-subset, so the
+estimator is unchanged, but ``top_k``'s partial-sort lowering is ~2.4x
+cheaper than ``jax.random.choice``'s argsort-of-permutation.  This is what
+fixed the bucketed rand-k regression: index derivation was the per-leaf cost
+BOTH paths re-pay (the schedule is the bitwise contract), and shrinking it
+exposes the bucketed path's structural advantage (one gather, one scatter,
+one concat for the whole model instead of one per leaf).
+
 Bucketed path: one payload for the whole model — per-segment index draws with
 the per-leaf key schedule, offset into global coordinates, decoded by a
 SINGLE scatter-add with a static per-entry ``d_leaf/k_leaf`` scale vector
 (bitwise the same f32 products and disjoint adds as the per-leaf decodes).
+
+Kernel capability: selection stays in lax (it owns the PRNG schedule — see
+:mod:`repro.kernels.sparse` for the fusion-boundary rationale); with
+``use_kernel=True`` the value gather and the scatter-add ``decode_sum`` (plus
+the fused ``/n`` in the memoryless mean) run as Pallas kernels, while the
+DIANA memory tail composes outside the kernel from the materialised sum (the
+FMA-contraction contract, kernels/sparse.py).  They are interpret-contract
+only (portable Mosaic scatter is future work), so auto resolves to OFF.
 """
 
 from __future__ import annotations
@@ -30,32 +47,90 @@ from .base import Compressor, Payload, index_dtype, index_nbits
 __all__ = ["RandKCompressor"]
 
 
+def _uniform_subset(key: jax.Array, d: int, k: int) -> jax.Array:
+    """A uniform random k-subset of ``range(d)`` as the indices of the ``k``
+    largest of ``d`` iid uint32 tags (int32 indices, order randomized by the
+    tags).  Equivalent in distribution to ``choice(replace=False)`` — ties
+    occur w.p. < d^2 / 2^33 and only ever locally reorder the selection —
+    at a fraction of its argsort-based cost."""
+    tags = jax.random.bits(key, (d,), dtype=jnp.uint32)
+    _, idx = jax.lax.top_k(tags, k)
+    return idx
+
+
 class RandKCompressor(Compressor):
     name = "randk"
     unbiased = True
+    kernel_oracle = "repro.kernels.ref::ref_sparse_decode_sum"
 
-    def __init__(self, k: int, *, alpha: Optional[float] = None, memory: bool = True):
+    def __init__(
+        self,
+        k: int,
+        *,
+        alpha: Optional[float] = None,
+        memory: bool = True,
+        use_kernel: Optional[bool] = None,
+    ):
         if k <= 0:
             raise ValueError(f"rand-k needs k >= 1, got {k}")
         self.k = k
         self.alpha = alpha
         self.carries_state = memory
+        # Sparse kernels are interpret-contract only: auto resolves to off.
+        self.use_kernel = bool(use_kernel) if use_kernel is not None else False
 
     def _k(self, d: int) -> int:
         return min(self.k, d)
+
+    def _gather(self, delta: jax.Array, idx: jax.Array) -> jax.Array:
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            return _kops.sparse_gather_op(delta.astype(jnp.float32), idx)
+        return delta.astype(jnp.float32)[idx]
 
     # ---------------------------------------------------------------- wire
 
     def compress(self, delta: jax.Array, key: jax.Array) -> Payload:
         d = delta.shape[0]
-        idx = jax.random.choice(key, d, (self._k(d),), replace=False)
-        idx = idx.astype(index_dtype(d))
-        return Payload(indices=idx, values=delta.astype(jnp.float32)[idx])
+        idx = _uniform_subset(key, d, self._k(d)).astype(index_dtype(d))
+        return Payload(indices=idx, values=self._gather(delta, idx))
 
     def decode(self, payload: Payload, d: int) -> jax.Array:
         kk = payload.values.shape[-1]
         scaled = payload.values * jnp.float32(d / kk)
         return jnp.zeros((d,), jnp.float32).at[payload.indices].add(scaled)
+
+    def _scale(self, d: int, kk: int) -> jax.Array:
+        # Vector operand form of the scalar d/k correction: a full() vector
+        # multiplies bitwise-identically to the scalar broadcast.
+        return jnp.full((kk,), jnp.float32(d / kk))
+
+    def decode_sum(self, gathered: Payload, n: int, d: int) -> jax.Array:
+        if not self.use_kernel:
+            return super().decode_sum(gathered, n, d)
+        from repro.kernels import ops as _kops
+
+        kk = gathered.values.shape[-1]
+        return _kops.sparse_decode_sum_op(
+            gathered.indices, gathered.values, self._scale(d, kk), d=d
+        )
+
+    def decode_sum_apply(self, gathered: Payload, n: int, d: int, h_server):
+        if not self.use_kernel or self.carries_state:
+            # With memory, the base composition runs over the KERNEL
+            # decode_sum (super() dispatches back through this class): the
+            # ``h + alpha*dm`` tail must consume a materialised sum so its
+            # fusion — and hence FMA contraction — is the fallback's own
+            # (see kernels/sparse.py).
+            return super().decode_sum_apply(gathered, n, d, h_server)
+        from repro.kernels import ops as _kops
+
+        kk = gathered.values.shape[-1]
+        ghat = _kops.sparse_decode_sum_mean_op(
+            gathered.indices, gathered.values, self._scale(d, kk), d=d
+        )
+        return ghat, h_server
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         if d is None:
@@ -68,10 +143,10 @@ class RandKCompressor(Compressor):
         keys = jax.random.split(key, layout.n_leaves)
         parts = []
         for k, off, d in zip(keys, layout.offsets, layout.sizes):
-            idx = jax.random.choice(k, d, (self._k(d),), replace=False)
-            parts.append(jnp.int32(off) + idx.astype(jnp.int32))
+            idx = _uniform_subset(k, d, self._k(d))
+            parts.append(jnp.int32(off) + idx)
         gidx = jnp.concatenate(parts).astype(index_dtype(layout.padded_size))
-        return Payload(indices=gidx, values=delta.astype(jnp.float32)[gidx])
+        return Payload(indices=gidx, values=self._gather(delta, gidx))
 
     def _bucket_scales(self, layout) -> jax.Array:
         """Static per-entry decode scale: ``d_leaf / k_leaf`` for each kept
@@ -86,6 +161,29 @@ class RandKCompressor(Compressor):
         return jnp.zeros(
             (layout.padded_size,), jnp.float32
         ).at[payload.indices].add(scaled)
+
+    def decode_sum_bucketed(self, layout, gathered: Payload, n: int) -> jax.Array:
+        if not self.use_kernel:
+            return super().decode_sum_bucketed(layout, gathered, n)
+        from repro.kernels import ops as _kops
+
+        return _kops.sparse_decode_sum_op(
+            gathered.indices, gathered.values, self._bucket_scales(layout),
+            d=layout.padded_size,
+        )
+
+    def decode_sum_apply_bucketed(self, layout, gathered, n, h_server):
+        if not self.use_kernel or self.carries_state:
+            # Memory case: base composition over the kernel decode_sum_bucketed
+            # (same rationale as decode_sum_apply).
+            return super().decode_sum_apply_bucketed(layout, gathered, n, h_server)
+        from repro.kernels import ops as _kops
+
+        ghat = _kops.sparse_decode_sum_mean_op(
+            gathered.indices, gathered.values, self._bucket_scales(layout),
+            d=layout.padded_size,
+        )
+        return ghat, h_server
 
     # -------------------------------------------------------- memory rule
 

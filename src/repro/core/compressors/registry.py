@@ -109,22 +109,24 @@ def _ternary(cfg, *, p=None, memory=True):
 
 @register("natural")
 def _natural(cfg, *, memory=True):
-    return NaturalCompressor(alpha=cfg.alpha, memory=memory)
+    return NaturalCompressor(alpha=cfg.alpha, memory=memory, use_kernel=cfg.use_kernel)
 
 
 @register("randk")
 def _randk(cfg, *, memory=True):
-    return RandKCompressor(cfg.k, alpha=cfg.alpha, memory=memory)
+    return RandKCompressor(
+        cfg.k, alpha=cfg.alpha, memory=memory, use_kernel=cfg.use_kernel
+    )
 
 
 @register("topk_ef")
 def _topk_ef(cfg):
-    return TopKEFCompressor(cfg.k)
+    return TopKEFCompressor(cfg.k, use_kernel=cfg.use_kernel)
 
 
 @register("identity")
 def _identity(cfg):
-    return IdentityCompressor()
+    return IdentityCompressor(use_kernel=cfg.use_kernel)
 
 
 alias("diana", "ternary", memory=True)

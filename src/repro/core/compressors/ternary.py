@@ -26,6 +26,7 @@ from ..quantization import (
     pad_to_blocks,
     quantize_blocks,
     quantize_blocks_from_uniform,
+    uniform_from_bits,
 )
 from .base import Compressor, Payload
 
@@ -42,6 +43,7 @@ class TernaryCompressor(Compressor):
 
     name = "ternary"
     unbiased = True
+    kernel_oracle = "repro.kernels.ref::ref_quantize_pack"
 
     def __init__(
         self,
@@ -114,6 +116,28 @@ class TernaryCompressor(Compressor):
                 acc = acc + signs * scales[i][:, None].astype(jnp.float32)
         return acc.reshape(-1)[:d]
 
+    def decode_sum_apply(self, gathered: Payload, n: int, d: int, h_server):
+        """Fused decode_sum + server update: ONE ``unpack_reduce_apply`` (or
+        ``_mean``) launch whose epilogue runs DIANA's memory rule on the
+        accumulator tile — the aggregated ghat never round-trips HBM between
+        decode and apply.  Bitwise-equal to the hook composition (same
+        accumulate recurrence, same jitted FMA contraction of ``h + a*dm``)."""
+        if not self.use_kernel:
+            return super().decode_sum_apply(gathered, n, d, h_server)
+        from repro.kernels import ops as _kops
+        from repro.models.sharding import shard
+
+        packed, scales = gathered.packed, gathered.scales
+        if self.carries_state:
+            ghat, newh = _kops.unpack_reduce_apply_op(
+                packed, scales[..., None], h_server,
+                alpha=self.memory_alpha(d),
+            )
+            return shard(ghat, "model"), shard(newh, "model")
+        acc = _kops.unpack_reduce_mean_op(packed, scales[..., None])
+        ghat = shard(acc, "model", None).reshape(-1)[:d]
+        return ghat, h_server
+
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         return 2.0 + 32.0 / self.block_size
 
@@ -161,8 +185,8 @@ class TernaryCompressor(Compressor):
         for k, m in zip(keys, seg_rows):
             seg = jax.lax.slice_in_dim(blocks, row, row + m)
             row += m
-            u = jax.random.uniform(k, (m, self.block_size), dtype=jnp.float32)
-            q = quantize_blocks_from_uniform(seg, u, p=self.p)
+            bits = jax.random.bits(k, (m, self.block_size), dtype=jnp.uint32)
+            q = quantize_blocks_from_uniform(seg, uniform_from_bits(bits), p=self.p)
             packed_parts.append(pack2bit(q.signs))
             scale_parts.append(q.scales)
         return Payload(packed=jnp.concatenate(packed_parts),
@@ -175,6 +199,12 @@ class TernaryCompressor(Compressor):
         """ONE ``unpack_reduce`` launch (or one unrolled accumulate) over the
         whole model — the per-step decode cost the ISSUE's motivation counts."""
         return self.decode_sum(gathered, n, layout.padded_size)
+
+    def decode_sum_apply_bucketed(self, layout, gathered, n, h_server):
+        """The bucketed flat buffer is block-aligned, so the per-leaf fused
+        kernel applies verbatim; alpha is block-size-determined and therefore
+        uniform across segments (``bucketed_alpha`` is the same scalar)."""
+        return self.decode_sum_apply(gathered, n, layout.padded_size, h_server)
 
     # -------------------------------------------------------- memory rule
 

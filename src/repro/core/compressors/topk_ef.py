@@ -11,6 +11,15 @@ compressor and not the aggregation loop.
 Wire format: ``indices`` + ``values``, like rand-k but with NO ``d/k``
 rescale (the selection is deterministic, rescaling would only add bias).
 Indices use the narrowest unsigned dtype covering ``d`` (8/16/32 bits).
+
+Kernel capability: selection stays in lax (the sort partitioning story is the
+whole reason ``_select_topk_sortfree`` exists); with ``use_kernel=True`` the
+value gather and the scatter-add ``decode_sum`` run through the shared sparse
+Pallas kernels with a unit scale vector (``x * 1.0 == x`` exactly, so the
+payloads and decodes stay bitwise-equal to the fallback).  The server tail is
+the MEAN rule — EF has no server memory — so ``decode_sum_apply`` fuses only
+the divide.  Interpret-contract only; auto resolves to off (see
+:mod:`repro.kernels.sparse`).
 """
 
 from __future__ import annotations
@@ -69,13 +78,26 @@ class TopKEFCompressor(Compressor):
     name = "topk_ef"
     unbiased = False
     carries_state = True  # the EF residual
+    kernel_oracle = "repro.kernels.ref::ref_sparse_decode_sum"
     replicate_perleaf = True  # top_k's sort RET_CHECKs old XLA's partitioner
                               # on sharded operands under manual subgroups
 
-    def __init__(self, k: int):
+    def __init__(self, k: int, *, use_kernel: Optional[bool] = None):
         if k <= 0:
             raise ValueError(f"top-k needs k >= 1, got {k}")
         self.k = k
+        # Sparse kernels are interpret-contract only: auto resolves to off.
+        self.use_kernel = bool(use_kernel) if use_kernel is not None else False
+
+    def _gather(self, x: jax.Array, idx: jax.Array) -> jax.Array:
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            return _kops.sparse_gather_op(x, idx)
+        return x[idx]
+
+    def _ones(self, kk: int) -> jax.Array:
+        return jnp.ones((kk,), jnp.float32)
 
     # ---------------------------------------------------------------- wire
 
@@ -100,10 +122,31 @@ class TopKEFCompressor(Compressor):
         else:
             _, idx = jax.lax.top_k(absd, kk)
         idx = idx.astype(index_dtype(d))
-        return Payload(indices=idx, values=delta.astype(jnp.float32)[idx])
+        return Payload(indices=idx, values=self._gather(delta.astype(jnp.float32), idx))
 
     def decode(self, payload: Payload, d: int) -> jax.Array:
         return jnp.zeros((d,), jnp.float32).at[payload.indices].add(payload.values)
+
+    def decode_sum(self, gathered: Payload, n: int, d: int) -> jax.Array:
+        if not self.use_kernel:
+            return super().decode_sum(gathered, n, d)
+        from repro.kernels import ops as _kops
+
+        kk = gathered.values.shape[-1]
+        return _kops.sparse_decode_sum_op(
+            gathered.indices, gathered.values, self._ones(kk), d=d
+        )
+
+    def decode_sum_apply(self, gathered: Payload, n: int, d: int, h_server):
+        if not self.use_kernel:
+            return super().decode_sum_apply(gathered, n, d, h_server)
+        from repro.kernels import ops as _kops
+
+        kk = gathered.values.shape[-1]
+        ghat = _kops.sparse_decode_sum_mean_op(
+            gathered.indices, gathered.values, self._ones(kk), d=d
+        )
+        return ghat, h_server  # EF: server memory is a no-op
 
     def bits_per_dim(self, d: Optional[int] = None) -> float:
         if d is None:
@@ -124,12 +167,22 @@ class TopKEFCompressor(Compressor):
             _, idx = jax.lax.top_k(jnp.abs(seg), min(self.k, d))
             parts.append(jnp.int32(off) + idx.astype(jnp.int32))
         gidx = jnp.concatenate(parts).astype(index_dtype(layout.padded_size))
-        return Payload(indices=gidx, values=x[gidx])
+        return Payload(indices=gidx, values=self._gather(x, gidx))
 
     def decode_bucketed(self, layout, payload: Payload) -> jax.Array:
         return jnp.zeros(
             (layout.padded_size,), jnp.float32
         ).at[payload.indices].add(payload.values)
+
+    def decode_sum_bucketed(self, layout, gathered: Payload, n: int) -> jax.Array:
+        if not self.use_kernel:
+            return super().decode_sum_bucketed(layout, gathered, n)
+        return self.decode_sum(gathered, n, layout.padded_size)
+
+    def decode_sum_apply_bucketed(self, layout, gathered, n, h_server):
+        if not self.use_kernel:
+            return super().decode_sum_apply_bucketed(layout, gathered, n, h_server)
+        return self.decode_sum_apply(gathered, n, layout.padded_size, h_server)
 
     # ------------------------------------------------ error-feedback rule
 

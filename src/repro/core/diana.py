@@ -382,13 +382,15 @@ def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names, n
     dhat_own = comp.decode(payload, dp)
 
     gathered = _gather_fused(payload, axis_names)        # ONE collective
-    dhat_mean = comp.decode_sum(gathered, n_workers, dp) / n_workers
-
+    # Fused server tail: decode_sum + mean + direction + memory update in one
+    # hook — ONE kernel launch for kernel-backed operators (the epilogue runs
+    # on the accumulator tile), the bitwise-identical hook composition
+    # otherwise.
+    ghat_flat, new_hs_f = comp.decode_sum_apply(
+        gathered, n_workers, dp, h_server.astype(jnp.float32)
+    )
     new_hw = comp.next_memory(h_local, dhat_own, delta).astype(cfg.h_dtype)[None]
-    new_hs = comp.next_server_memory(
-        h_server.astype(jnp.float32), dhat_mean
-    ).astype(cfg.h_dtype)
-    ghat_flat = comp.server_direction(h_server.astype(jnp.float32), dhat_mean)
+    new_hs = new_hs_f.astype(cfg.h_dtype)
     # f32 leaves — the caller casts to the gradient dtypes after the
     # (optional) downlink round, like the per-leaf path.
     ghat = layout.unflatten(ghat_flat, cast=False)
@@ -956,18 +958,14 @@ def _reference_agg_perleaf(grads_per_worker, h_worker, h_server, key, cfg,
         )
     )
     pay_leaves = jax.tree_util.tree_leaves(stacked, is_leaf=_is_payload)
-    dhat_mean = jax.tree_util.tree_unflatten(treedef, [
-        comp.decode_sum(pay, n, l.size) / n
-        for pay, l in zip(pay_leaves, like_leaves)
-    ])
-
-    ghat_flat = jax.tree_util.tree_map(
-        comp.server_direction, h_server, dhat_mean
-    )
+    hs_leaves = jax.tree_util.tree_leaves(h_server)
+    served = [
+        comp.decode_sum_apply(pay, n, l.size, hs)
+        for pay, l, hs in zip(pay_leaves, like_leaves, hs_leaves)
+    ]
+    ghat_flat = jax.tree_util.tree_unflatten(treedef, [g for g, _ in served])
     new_hw = jax.tree_util.tree_map(lambda *rows: jnp.stack(rows), *new_h_rows)
-    new_hs = jax.tree_util.tree_map(
-        comp.next_server_memory, h_server, dhat_mean
-    )
+    new_hs = jax.tree_util.tree_unflatten(treedef, [h for _, h in served])
     ghat = jax.tree_util.tree_map(
         lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
     )
@@ -993,8 +991,13 @@ def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
                             gfold=None):
     """The bucketed reference AGGREGATION (uplink only — downlink and
     momentum live in the callers' shared tails): scan over workers, each
-    round ONE compress on the flattened model (or policy group); ONE
-    decode_sum over the scan-stacked payload.  Bitwise-equal to the per-leaf
+    round ONE compress on the flattened model (or policy group); ONE fused
+    decode_sum+apply over the scan-stacked payload.  The worker loop stays a
+    ``lax.scan`` on purpose: an eagerly-unrolled loop compiles each
+    ``compress`` in its own context, and XLA is free to reassociate the p=2
+    block-norm reduction differently there — 1-ulp scale drift against the
+    per-leaf reference (same compile-context sensitivity as the FMA
+    contraction note in kernels/sparse.py).  Bitwise-equal to the per-leaf
     reference (same draws, same recurrences) and to the distributed bucketed
     path."""
     layout = bucket_layout(cfg, jax.tree_util.tree_map(
@@ -1016,9 +1019,6 @@ def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
         worker_round, None,
         (jnp.arange(n), grads_per_worker, h_worker),
     )
-    dhat_mean = comp.decode_sum(stacked, n, dp) / n
-
-    ghat_flat = comp.server_direction(h_server, dhat_mean)
-    new_hs = comp.next_server_memory(h_server, dhat_mean)
+    ghat_flat, new_hs = comp.decode_sum_apply(stacked, n, dp, h_server)
     ghat = layout.unflatten(ghat_flat, cast=False)  # f32, like the per-leaf ref
     return ghat, new_h, new_hs

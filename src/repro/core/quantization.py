@@ -37,7 +37,23 @@ __all__ = [
     "pad_to_blocks",
     "num_blocks",
     "quantize_blocks_from_uniform",
+    "uniform_from_bits",
 ]
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """uint32 -> uniform [0,1) f32 using the top 24 bits (TPU-friendly).
+
+    THE one bits->uniform map of the repo: every stochastic operator draws
+    ``jax.random.bits`` and feeds them through this function, and the Pallas
+    kernels apply the identical shift/scale to their bits operand (or to
+    ``pltpu.prng_random_bits`` on compiled TPU) — which is what makes the
+    kernel routes bitwise-EQUAL to the pure-jnp fallbacks given the same
+    bits, not merely equal in distribution.
+    """
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / (1 << 24)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -161,8 +177,11 @@ def quantize_blocks(
     every ``p >= 1``.
     """
     blocks = pad_to_blocks(x, block_size)            # (m, B)
-    u = jax.random.uniform(key, blocks.shape, dtype=jnp.float32)
-    return quantize_blocks_from_uniform(blocks, u, p=p)
+    # Draw raw bits and derive the uniforms with the kernels' bits->uniform
+    # map, so the pre-drawn-bits kernel route consumes the SAME stream and
+    # produces bitwise-identical wire payloads (DESIGN.md §Kernels).
+    bits = jax.random.bits(key, blocks.shape, dtype=jnp.uint32)
+    return quantize_blocks_from_uniform(blocks, uniform_from_bits(bits), p=p)
 
 
 def dequantize_blocks(q: QuantizedBlocks, shape=None, dtype=jnp.float32) -> jax.Array:

@@ -21,9 +21,27 @@ from jax.experimental import pallas as pl
 
 from repro.core.quantization import pad_axis_to_multiple
 
-__all__ = ["unpack_reduce", "DEFAULT_TILE_M"]
+__all__ = [
+    "unpack_reduce",
+    "unpack_reduce_mean",
+    "unpack_reduce_apply",
+    "DEFAULT_TILE_M",
+]
 
 DEFAULT_TILE_M = 8
+
+
+def _unpack_dense(packed):
+    """(TILE_M, B/4) u8 -> (TILE_M, B) f32 in {-1, 0, +1}.
+
+    Unpack with unrolled shifts (no captured constant arrays in Pallas).
+    """
+    parts = [
+        ((packed >> jnp.uint8(s)) & jnp.uint8(3)).astype(jnp.int8) - 1
+        for s in (0, 2, 4, 6)
+    ]
+    g = jnp.stack(parts, axis=-1)                             # (TILE_M, B/4, 4)
+    return g.reshape(packed.shape[0], -1).astype(jnp.float32)
 
 
 def _kernel(packed_ref, scales_ref, out_ref):
@@ -33,16 +51,30 @@ def _kernel(packed_ref, scales_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    packed = packed_ref[0]                                    # (TILE_M, B/4)
-    # Unpack with unrolled shifts (no captured constant arrays in Pallas).
-    parts = [
-        ((packed >> jnp.uint8(s)) & jnp.uint8(3)).astype(jnp.int8) - 1
-        for s in (0, 2, 4, 6)
-    ]
-    g = jnp.stack(parts, axis=-1)                             # (TILE_M, B/4, 4)
-    tm = packed.shape[0]
-    dense = g.reshape(tm, -1).astype(jnp.float32)             # (TILE_M, B)
+    dense = _unpack_dense(packed_ref[0])                      # (TILE_M, B)
     out_ref[...] += dense * scales_ref[0].astype(jnp.float32)
+
+
+def _kernel_mean(packed_ref, scales_ref, out_ref, *, n):
+    _kernel(packed_ref, scales_ref, out_ref)
+
+    @pl.when(pl.program_id(0) == n - 1)
+    def _mean():
+        out_ref[...] = out_ref[...] / jnp.float32(n)
+
+
+def _kernel_apply(packed_ref, scales_ref, h_ref, ghat_ref, newh_ref, *, n, alpha):
+    # Accumulate the worker sum in ghat_ref, then on the LAST worker visit run
+    # the server epilogue in-register: dm = s/n, ghat = h + dm, h' = h + a*dm.
+    # The aggregated sum never round-trips HBM between decode and apply.
+    _kernel(packed_ref, scales_ref, ghat_ref)
+
+    @pl.when(pl.program_id(0) == n - 1)
+    def _apply():
+        dm = ghat_ref[...] / jnp.float32(n)
+        h = h_ref[...]
+        ghat_ref[...] = h + dm
+        newh_ref[...] = h + jnp.float32(alpha) * dm
 
 
 @functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
@@ -72,3 +104,79 @@ def unpack_reduce(
         interpret=interpret,
     )(packed, scales)
     return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def unpack_reduce_mean(
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused decode_sum + divide: (n, m, B/4) u8 -> (m, B) f32 mean over n."""
+    n, m, b4 = packed.shape
+    packed = pad_axis_to_multiple(packed, tile_m, axis=1)
+    scales = pad_axis_to_multiple(scales, tile_m, axis=1)
+    mp = packed.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_mean, n=n),
+        grid=(n, mp // tile_m),
+        in_specs=[
+            pl.BlockSpec((1, tile_m, b4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tile_m, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, b4 * 4), lambda i, j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, b4 * 4), jnp.float32),
+        interpret=interpret,
+    )(packed, scales)
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "tile_m", "interpret"))
+def unpack_reduce_apply(
+    packed: jax.Array,
+    scales: jax.Array,
+    h: jax.Array,
+    *,
+    alpha: float,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused decode_sum + DIANA server update for the ternary family.
+
+    packed (n, m, B/4) u8, scales (n, m, 1) f32, h (d,) f32 with
+    d <= m * B.  Returns flat ``(ghat, new_h) = (h + dm, h + alpha * dm)``
+    where ``dm = sum_i unpack(packed_i) * scales_i / n``, both (d,).
+    """
+    n, m, b4 = packed.shape
+    b = b4 * 4
+    d = h.shape[0]
+    h2 = pad_axis_to_multiple(h.astype(jnp.float32), b).reshape(-1, b)
+    if h2.shape[0] != m:
+        raise ValueError(f"h rows {h2.shape[0]} != packed rows {m}")
+    packed = pad_axis_to_multiple(packed, tile_m, axis=1)
+    scales = pad_axis_to_multiple(scales, tile_m, axis=1)
+    h2 = pad_axis_to_multiple(h2, tile_m, axis=0)
+    mp = packed.shape[1]
+
+    ghat, newh = pl.pallas_call(
+        functools.partial(_kernel_apply, n=n, alpha=float(alpha)),
+        grid=(n, mp // tile_m),
+        in_specs=[
+            pl.BlockSpec((1, tile_m, b4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tile_m, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tile_m, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m, b), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_m, b), lambda i, j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, b), jnp.float32),
+            jax.ShapeDtypeStruct((mp, b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(packed, scales, h2)
+    return ghat.reshape(-1)[:d], newh.reshape(-1)[:d]

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Kernel-capability linter: every registry operator's kernel surface is
+well-formed.
+
+Run as a CI step (and as a tier-1 test via ``tests/test_kernel_coverage.py``,
+mirroring ``tools/check_policy.py``) so the kernel contract of DESIGN.md
+§Kernels can never silently rot:
+
+1. **Capability**: every canonical operator (and every alias) constructs with
+   ``use_kernel=True``, ``use_kernel=False`` and ``use_kernel=None`` (auto),
+   and the instance resolves the flag to a plain bool — the auto policy is an
+   operator-owned decision, never an unresolved None on the hot path.
+
+2. **Oracle**: every operator names its interpret-mode oracle in
+   ``kernel_oracle`` as a ``"module::symbol"`` string that imports and
+   resolves to a callable — the pure-jnp function its kernel route is
+   bitwise-validated against in CI.
+
+3. **Fallback reachability**: with ``use_kernel=False`` a one-worker
+   compress -> decode_sum round trip runs WITHOUT a single ``pallas_call`` in
+   the traced jaxpr (counted, not assumed), and with ``use_kernel=True`` the
+   same round trip still traces — so both routes of the bitwise-equality
+   contract stay alive on every backend.
+
+Exit code 0 = clean; 1 = any finding, each printed as ``operator: message``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+# method -> config kwargs that make it constructible (sparse operators need k)
+METHOD_KW = {"randk": dict(k=4), "topk_ef": dict(k=4),
+             "rand-k": dict(k=4), "top-k-ef": dict(k=4)}
+
+
+def _make(method: str, use_kernel):
+    from repro.core.policy import CompressionConfig
+
+    cfg = CompressionConfig(method=method, use_kernel=use_kernel,
+                            **METHOD_KW.get(method, {}))
+    return cfg.make()
+
+
+def capability_errors(method: str) -> list:
+    errors = []
+    for flag in (True, False, None):
+        try:
+            comp = _make(method, flag)
+        except Exception as e:
+            errors.append(f"{method}: use_kernel={flag} does not construct "
+                          f"({type(e).__name__}: {e})")
+            continue
+        if not isinstance(comp.use_kernel, bool):
+            errors.append(
+                f"{method}: use_kernel={flag} resolved to "
+                f"{comp.use_kernel!r}, not a bool — the auto policy must "
+                f"resolve at construction")
+        if flag is not None and comp.use_kernel != flag:
+            errors.append(
+                f"{method}: explicit use_kernel={flag} was overridden to "
+                f"{comp.use_kernel} — explicit opt-in/out must win over auto")
+    return errors
+
+
+def oracle_errors(method: str) -> list:
+    comp = _make(method, None)
+    oracle = type(comp).kernel_oracle
+    if not oracle:
+        return [f"{method}: declares no kernel_oracle — every operator must "
+                f"name the interpret-mode reference its kernels are "
+                f"validated against"]
+    if "::" not in oracle:
+        return [f"{method}: kernel_oracle {oracle!r} is not 'module::symbol'"]
+    mod_name, sym = oracle.split("::", 1)
+    try:
+        mod = importlib.import_module(mod_name)
+    except Exception as e:
+        return [f"{method}: kernel_oracle module {mod_name!r} does not "
+                f"import ({type(e).__name__}: {e})"]
+    fn = getattr(mod, sym, None)
+    if not callable(fn):
+        return [f"{method}: kernel_oracle symbol {oracle!r} does not resolve "
+                f"to a callable"]
+    return []
+
+
+def _count_pallas(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None:
+                    n += _count_pallas(inner)
+    return n
+
+
+def fallback_errors(method: str) -> list:
+    """Trace a one-worker round trip both ways and count pallas launches."""
+    import jax
+    import jax.numpy as jnp
+
+    errors = []
+    d = 256
+
+    def round_trip(comp, g):
+        pay = comp.compress(g, jax.random.PRNGKey(0))
+        gathered = jax.tree_util.tree_map(lambda x: x[None], pay)
+        return comp.decode_sum(gathered, 1, d)
+
+    for flag, want_kernel in ((False, False), (True, None)):
+        comp = _make(method, flag)
+        try:
+            jaxpr = jax.make_jaxpr(
+                lambda g: round_trip(comp, g))(jnp.zeros((d,), jnp.float32))
+        except Exception as e:
+            errors.append(f"{method}: use_kernel={flag} round trip does not "
+                          f"trace ({type(e).__name__}: {e})")
+            continue
+        launches = _count_pallas(jaxpr.jaxpr)
+        if want_kernel is False and launches:
+            errors.append(
+                f"{method}: use_kernel=False round trip still traces "
+                f"{launches} pallas_call(s) — the lax fallback is no longer "
+                f"reachable")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the jaxpr fallback-reachability checks "
+                         "(no tracing, much faster)")
+    args = ap.parse_args(argv)
+
+    from repro.core.compressors.registry import available_methods
+
+    errors = []
+    for method in available_methods():
+        errs = capability_errors(method)
+        if not errs:
+            errs += oracle_errors(method)
+        if not errs and not args.no_trace:
+            errs += fallback_errors(method)
+        errors += errs
+
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"check_kernels: {len(errors)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"check_kernels: all {len(available_methods())} operators declare "
+          f"use_kernel, name a resolving interpret oracle, and keep the lax "
+          f"fallback reachable")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
