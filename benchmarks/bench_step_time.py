@@ -60,6 +60,20 @@ from repro.core.diana import DianaState, aggregate_shardmap, bucket_layout, init
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_step_time.json")
 
+
+def smoke_out_path(committed: str) -> str:
+    """Scratch destination for a --smoke run of a trajectory artifact.
+
+    Smoke rows measure a cut-down grid on whatever machine CI landed on —
+    they must NEVER land next to the committed repo-root JSON (a sibling
+    file still pollutes `git status` and invites an accidental commit), so
+    without an explicit ``--out`` they go to the system temp dir.
+    """
+    import tempfile
+
+    base = os.path.basename(committed).replace(".json", ".smoke.json")
+    return os.path.join(tempfile.gettempdir(), base)
+
 N_WORKERS = 4
 
 # Synthetic multi-leaf "models": many leaves is exactly the regime the
@@ -161,10 +175,19 @@ def _setup_shardmap(params, cfg, key):
     state = init_state(params, cfg, N_WORKERS)
     has_down = state.h_down is not None
 
+    elastic = (getattr(cfg, "participation", None) is not None
+               and not cfg.participation.is_trivial)
+
     def body(gs, h_w, h_s, h_d, k):
         g_local = jax.tree_util.tree_map(lambda g: g[0], gs)
-        wkey = jax.random.fold_in(k, jax.lax.axis_index("data"))
+        widx = jax.lax.axis_index("data")
+        wkey = jax.random.fold_in(k, widx)
         kw = dict(down_key=jax.random.fold_in(k, DOWN_FOLD)) if has_down else {}
+        if elastic:
+            from repro.core.diana import PART_FOLD
+
+            kw.update(part_key=jax.random.fold_in(k, PART_FOLD),
+                      worker_index=widx)
         ghat, new = aggregate_shardmap(
             g_local, DianaState(h_w, h_s, None, h_d), wkey, cfg,
             axis_names=("data",), n_workers=N_WORKERS, **kw)
@@ -241,6 +264,65 @@ def collect(smoke: bool = False):
                     "fraction_of_roofline_bucketed": _roofline_fraction(
                         floor_bytes, cell.get("bucketed")),
                 })
+    rows += collect_elastic(smoke)
+    return rows
+
+
+# elastic grid: sampling rate x {memory, error-feedback} operator — the
+# step-time cost of the mask algebra plus the honest wire accounting (a
+# non-participant sends nothing, so EXPECTED bits/step scale with q)
+ELASTIC_QS = (1.0, 0.5, 0.25)
+ELASTIC_OPERATORS = [
+    ("diana", dict(block_size=256, p=math.inf)),
+    ("topk", dict(k=32)),
+]
+
+
+def collect_elastic(smoke: bool = False):
+    """q x operator rows: bucketed step time under partial participation.
+
+    ``q=1.0`` runs participation=None — the exact pre-elastic code path, the
+    baseline the masked rows are compared against.  ``effective`` bits/step
+    multiply the operator's wire rate by the a-priori participation rate
+    (``repro.core.participation.expected_rate``): the uplink payload of a
+    non-participant is never sent, so the expected per-step traffic shrinks
+    linearly in q even though the SPMD buffers stay fixed-shape.
+    """
+    from repro.core.participation import ParticipationSpec, expected_rate
+    from repro.core import bucketed_compressor
+
+    reps = 5 if smoke else 15
+    key = jax.random.PRNGKey(1)
+    size_name = "tiny" if smoke else "small"
+    params = _params((SIZES_SMOKE if smoke else SIZES)[size_name])
+    method = {"diana": "diana", "topk": "topk_ef"}
+    rows = []
+    for label, kw in ELASTIC_OPERATORS:
+        for q in ELASTIC_QS:
+            spec = None if q >= 1.0 else ParticipationSpec(q=q)
+            cfg = CompressionConfig(method=method[label], bucketed=True,
+                                    participation=spec, **kw)
+            cells = {}
+            for path, setup in PATHS.items():
+                made = setup(params, cfg, key)
+                if made is not None:
+                    cells[path] = made
+            cell = _timeit_interleaved(cells, reps)
+            lay = bucket_layout(cfg, params)
+            up_bits = bucketed_compressor(cfg, lay).bits_per_dim()
+            rate = 1.0 if spec is None else expected_rate(spec)
+            rows.append({
+                "size": size_name,
+                "n_params": lay.size,
+                "operator": f"elastic/{label}",
+                "participation_q": q,
+                "us_reference": cell.get("reference"),
+                "us_shardmap": cell.get("shardmap"),
+                "uplink_bits_per_dim": round(up_bits, 4),
+                "effective_uplink_bits_per_dim": round(up_bits * rate, 4),
+                "effective_uplink_bits_per_step": round(
+                    up_bits * rate * lay.size * N_WORKERS, 1),
+            })
     return rows
 
 
@@ -304,16 +386,24 @@ def run():
     """
     full = bool(os.environ.get("BENCH_FULL"))
     rows = collect(smoke=not full)
-    write_json(rows, OUT_PATH if full else os.path.join(
-        os.path.dirname(OUT_PATH), "BENCH_step_time.smoke.json"))
-    return [
-        {
+    write_json(rows, OUT_PATH if full else smoke_out_path(OUT_PATH))
+    out = []
+    for r in rows:
+        if "participation_q" in r:
+            out.append({
+                "name": f"step_time/{r['size']}/{r['operator']}"
+                        f"/q{r['participation_q']}",
+                "us_per_call": r["us_shardmap"] or r["us_reference"],
+                "derived": f"eff_bits_per_dim="
+                           f"{r['effective_uplink_bits_per_dim']}",
+            })
+            continue
+        out.append({
             "name": f"step_time/{r['size']}/{r['operator']}/{r['path']}/bucketed",
             "us_per_call": r["us_bucketed"],
             "derived": f"speedup_vs_perleaf={r['speedup']:.2f}x" if r["speedup"] else "",
-        }
-        for r in rows
-    ]
+        })
+    return out
 
 
 def main(argv=None):
@@ -322,14 +412,21 @@ def main(argv=None):
                     help="fewer reps (CI) — same size x operator grid")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: the committed repo-root "
-                         "file for full runs, a .smoke.json sibling for "
-                         "--smoke so the trajectory artifact is not clobbered)")
+                         "file for full runs, a temp-dir scratch file for "
+                         "--smoke so the trajectory artifact is never "
+                         "clobbered or shadowed by a sibling)")
     args = ap.parse_args(argv)
     rows = collect(smoke=args.smoke)
-    out = args.out or (OUT_PATH if not args.smoke else os.path.join(
-        os.path.dirname(OUT_PATH), "BENCH_step_time.smoke.json"))
+    out = args.out or (OUT_PATH if not args.smoke else smoke_out_path(OUT_PATH))
     path = write_json(rows, out)
     for r in rows:
+        if "participation_q" in r:
+            rf = f"{r['us_reference']:10.0f}" if r["us_reference"] else "         -"
+            sm = f"{r['us_shardmap']:10.0f}" if r["us_shardmap"] else "         -"
+            print(f"{r['size']:7s} {r['operator']:14s} q={r['participation_q']:<5} "
+                  f"reference{rf}us shardmap{sm}us "
+                  f"eff_bits/dim {r['effective_uplink_bits_per_dim']}")
+            continue
         pl = f"{r['us_perleaf']:10.0f}" if r["us_perleaf"] else "         -"
         bk = f"{r['us_bucketed']:10.0f}" if r["us_bucketed"] else "         -"
         sp = f"{r['speedup']:6.2f}x" if r["speedup"] else "      -"

@@ -288,12 +288,15 @@ def main(argv=None):
                     help="smaller buffers / fewer reps (CI)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: the committed repo-root "
-                         "file for full runs, a .smoke.json sibling for "
-                         "--smoke so the trajectory artifact is not clobbered)")
+                         "file for full runs, a temp-dir scratch file for "
+                         "--smoke so the trajectory artifact is never "
+                         "clobbered or shadowed by a sibling)")
     args = ap.parse_args(argv)
     rows = kernel_rows(smoke=args.smoke)
-    out = args.out or (ROOFLINE_OUT if not args.smoke else
-                       ROOFLINE_OUT.replace(".json", ".smoke.json"))
+    from benchmarks.bench_step_time import smoke_out_path
+
+    out = args.out or (ROOFLINE_OUT if not args.smoke
+                       else smoke_out_path(ROOFLINE_OUT))
     path = write_kernel_json(rows, out)
     peak = measure_peak_bandwidth() / 1e9
     print(f"measured peak bandwidth: {peak:.1f} GB/s "

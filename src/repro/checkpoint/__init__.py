@@ -1,9 +1,10 @@
 from .checkpoint import (
     latest_step,
     load_metadata,
+    participation_restore_hint,
     restore_checkpoint,
     save_checkpoint,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "load_metadata"]
+           "load_metadata", "participation_restore_hint"]

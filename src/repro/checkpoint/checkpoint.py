@@ -22,7 +22,7 @@ import ml_dtypes
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "load_metadata"]
+           "load_metadata", "participation_restore_hint"]
 
 _MANIFEST = "manifest.json"
 
@@ -138,3 +138,37 @@ def load_metadata(directory: str):
         return None
     with open(mpath) as f:
         return json.load(f).get("metadata")
+
+
+def participation_restore_hint(directory: str, policy) -> str | None:
+    """A human-readable warning when the restore template's elastic spec
+    differs from the one the checkpoint was trained under, else ``None``.
+
+    Participation adds NO state leaves (the mask algebra is fixed-shape
+    SPMD — DESIGN.md §Elasticity), so :func:`restore_checkpoint` cannot
+    catch a changed spec the way a missing ``vr``/``h_down`` key catches a
+    changed feature flag.  The mismatch is legal — every worker memory is a
+    valid h_i regardless of who produced it — but the participation mask is
+    keyed by the step counter, so resuming under a different spec (or a
+    shifted churn schedule) samples a different worker sequence from the
+    resume step onward.  Callers that care (tests, the CLI trainer) compare
+    here and surface the hint instead of silently proceeding.
+
+    ``policy`` is the :class:`~repro.core.policy.CompressionPolicy` of the
+    restore template; the saved side comes from the manifest metadata's
+    serialized policy (``metadata["policy"]``, absent = pre-elastic save).
+    """
+    meta = load_metadata(directory)
+    saved = (meta or {}).get("policy", {}).get("participation")
+    spec = getattr(policy, "participation", None)
+    live = spec.to_json_dict() if spec is not None and not spec.is_trivial else None
+    if saved == live:
+        return None
+    return (
+        f"participation spec changed between save and restore "
+        f"(checkpoint: {saved!r}, template: {live!r}) — state shapes are "
+        f"unaffected, but the step-keyed participation mask (and any churn "
+        f"schedule) will sample a different worker sequence from step "
+        f"{latest_step(directory)} onward; pass the saved spec to resume "
+        f"the exact trajectory"
+    )

@@ -41,6 +41,17 @@ from .policy import (
     partition_for,
     policy_bits_per_dim,
 )
+from .participation import (
+    PART_FOLD,
+    ChurnEvent,
+    FaultEvent,
+    FaultPlan,
+    ParticipationSpec,
+    expected_rate,
+    parse_faults,
+    participation_mask,
+    step_ctx,
+)
 from .vr import (
     VarianceReducer,
     VRState,
@@ -75,6 +86,8 @@ __all__ = [
     "Compressor", "Payload", "available_methods", "make_compressor",
     "BucketLayout", "GroupedBucketLayout", "BucketedCompressor",
     "bucketed_compressor", "bucket_layout",
+    "PART_FOLD", "ParticipationSpec", "ChurnEvent", "FaultPlan", "FaultEvent",
+    "participation_mask", "step_ctx", "expected_rate", "parse_faults",
     "VarianceReducer", "VRState", "control_variate", "init_vr", "refresh",
     "resolve_vr_p", "vr_coin",
     "DianaState", "DOWN_FOLD", "GROUP_FOLD", "init_state", "init_downlink",

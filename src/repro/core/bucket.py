@@ -49,6 +49,9 @@ __all__ = [
     "payload_recipe",
     "unfuse_payload",
     "wire_roundtrip",
+    "CHECKSUM_BYTES",
+    "add_checksum",
+    "verify_checksum",
 ]
 
 
@@ -242,6 +245,50 @@ def unfuse_payload(buf: jax.Array, recipe) -> Payload:
             part = part.reshape(*batch, *shape, dt.itemsize)
             fields[fi] = jax.lax.bitcast_convert_type(part, dt)
     return Payload(*fields)
+
+
+# ---------------------------------------------------------------------------
+# Wire checksums (fault-injection harness — repro.core.participation)
+# ---------------------------------------------------------------------------
+
+# 8-byte tail on the fused wire: two uint32 words — the plain byte sum and a
+# position-weighted byte sum (both mod 2^32).  The weighted word catches the
+# transpositions/offset errors a plain sum misses; a single-byte XOR corrupt
+# always flips at least the plain word.  Not cryptographic — an integrity
+# check against the FaultPlan harness and garden-variety wire corruption.
+CHECKSUM_BYTES = 8
+
+
+def _checksum_words(flat: jax.Array) -> jax.Array:
+    """``(..., L) uint8 -> (..., 2) uint32`` checksum words."""
+    b = flat.astype(jnp.uint32)
+    pos = jnp.arange(1, flat.shape[-1] + 1, dtype=jnp.uint32)
+    s1 = jnp.sum(b, axis=-1, dtype=jnp.uint32)
+    s2 = jnp.sum(b * pos, axis=-1, dtype=jnp.uint32)
+    return jnp.stack([s1, s2], axis=-1)
+
+
+def add_checksum(buf: jax.Array) -> jax.Array:
+    """ONE worker's fused ``(lead, W)`` uint8 buffer -> the 1-D wire object
+    ``(lead*W + CHECKSUM_BYTES,)``: payload bytes then the checksum tail.
+    The receivers' :func:`verify_checksum` recomputes the words and excludes
+    payloads that fail, instead of decoding corrupted bytes into the sum."""
+    flat = buf.reshape(-1)
+    tail = jax.lax.bitcast_convert_type(_checksum_words(flat), jnp.uint8)
+    return jnp.concatenate([flat, tail.reshape(-1)])
+
+
+def verify_checksum(wire: jax.Array):
+    """Inverse of :func:`add_checksum` over any leading (worker) dims:
+    ``(..., L+8) -> ((..., L) payload bytes, (...,) ok)``.  ``ok`` is False
+    exactly when the recomputed words disagree with the tail — the payload
+    must then be excluded (its bytes are NOT sanitised)."""
+    flat = wire[..., :-CHECKSUM_BYTES]
+    tail = wire[..., -CHECKSUM_BYTES:]
+    got = jax.lax.bitcast_convert_type(
+        tail.reshape(*wire.shape[:-1], 2, 4), jnp.uint32)
+    ok = jnp.all(got == _checksum_words(flat), axis=-1)
+    return flat, ok
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from .compressors import Payload, make_compressor
 from .compressors.registry import available_methods, canonical_name
 from .compressors.ternary import TernaryCompressor
+from .participation import ParticipationSpec
 from .quantization import QuantizedBlocks, alpha_p
 from .packing import unpack2bit
 
@@ -81,6 +82,12 @@ class CompressionConfig:
     down_bucketed: downlink layout — ``True`` compresses ghat as ONE flat
                  buffer in the downlink operator's own BucketLayout, ``False``
                  per leaf.  ``None`` (default) follows ``bucketed``.
+    participation: elastic-participation spec
+                 (:class:`~repro.core.participation.ParticipationSpec`):
+                 client sampling, straggler dropout, churn and the degraded
+                 -step floor (DESIGN.md §Elasticity).  ``None`` or a trivial
+                 spec keeps the round on the exact pre-elastic code path.
+                 A frozen dataclass, so the config stays hashable.
     """
 
     method: str = "diana"
@@ -97,6 +104,7 @@ class CompressionConfig:
     down_method: Optional[str] = None
     down_k: Optional[int] = None
     down_bucketed: Optional[bool] = None
+    participation: Optional[ParticipationSpec] = None
 
     def __post_init__(self):
         canonical_name(self.method)  # raises on unknown methods
@@ -106,6 +114,10 @@ class CompressionConfig:
             raise ValueError("block_size must be a multiple of 4 for 2-bit packing")
         if self.vr_p is not None and not 0.0 < self.vr_p <= 1.0:
             raise ValueError(f"vr_p must be in (0, 1], got {self.vr_p}")
+        if self.participation is not None and not isinstance(
+            self.participation, ParticipationSpec
+        ):
+            raise TypeError("participation must be a ParticipationSpec")
 
     # ------------------------------------------------------------- factory
 
@@ -146,6 +158,10 @@ class CompressionConfig:
             down_bucketed=None,
             vr=False,
             vr_p=None,
+            # The broadcast is replicated determinism, not a sampled sum —
+            # elasticity acts on the uplink round (and freezes h_down on
+            # degraded steps at the caller), never on the downlink operator.
+            participation=None,
         )
 
     @property

@@ -73,6 +73,32 @@ class Payload(NamedTuple):
         """The ``i``-th worker's payload from a stacked/gathered payload."""
         return Payload(*(None if f is None else f[i] for f in self))
 
+    def mask_workers(self, mask: jax.Array) -> "Payload":
+        """Zero out non-participants in a GATHERED payload (leading worker
+        axis on every field, ``mask`` a (n,) bool) so each excluded worker
+        decodes to an EXACT zero vector and the unchanged ``decode_sum``
+        recurrence sums only the participant set — the fixed-shape SPMD form
+        of partial participation (repro.core.participation).
+
+        One field per payload suffices, by the decode structure every
+        registry operator shares: zero ``scales`` and the unpacked ternary
+        signs multiply to zero; else zero ``values`` and the dense/scattered
+        contribution is zero; else zero ``packed`` and natural compression's
+        code 0 decodes to exactly 0.0.
+        """
+
+        def zero_rows(f):
+            m = mask.reshape(mask.shape + (1,) * (f.ndim - mask.ndim))
+            return jnp.where(m, f, jnp.zeros_like(f))
+
+        if self.scales is not None:
+            return self._replace(scales=zero_rows(self.scales))
+        if self.values is not None:
+            return self._replace(values=zero_rows(self.values))
+        if self.packed is not None:
+            return self._replace(packed=zero_rows(self.packed))
+        return self
+
 
 def payload_nbits(payload: Payload) -> int:
     """Container bits of one payload (upper bound on the logical wire cost)."""

@@ -35,14 +35,23 @@ import jax.numpy as jnp
 
 from .bucket import (
     BucketLayout,
+    add_checksum,
     bucketed_compressor,
     fuse_payload,
     payload_recipe,
     unfuse_payload,
+    verify_checksum,
     wire_roundtrip,
 )
 from .compression import CompressionConfig
 from .compressors import Compressor, Payload
+from .participation import (
+    PART_FOLD,
+    ParticipationSpec,
+    apply_faults,
+    direction_scale,
+    step_ctx,
+)
 from .policy import CompressionPolicy, partition_for
 from .vr import VRState, control_variate, init_vr, reference_coins, refresh, vr_coin
 
@@ -93,6 +102,67 @@ def tree_zeros_like(tree, dtype=None):
     return jax.tree_util.tree_map(
         lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
     )
+
+
+# ---------------------------------------------------------------------------
+# Elastic participation plumbing (DESIGN.md §Elasticity)
+# ---------------------------------------------------------------------------
+
+def _resolve_participation(policy, cfg):
+    """The active :class:`ParticipationSpec`, or None — a trivial spec keeps
+    the aggregation on the exact pre-elastic code path, bit for bit."""
+    spec = policy.participation if policy is not None else cfg.participation
+    if spec is None or spec.is_trivial:
+        return None
+    return spec
+
+
+def _where_rows(cond, new, old):
+    """Fixed-shape advance/freeze select: ``cond`` is a () or (n,) bool
+    broadcast from the left over each leaf's trailing dims.  An explicit
+    select — NEVER "add zero" — so frozen state is bitwise-untouched
+    (``x + 0.0`` maps ``-0.0`` to ``+0.0``)."""
+
+    def sel(a, b):
+        c = cond.reshape(cond.shape + (1,) * (b.ndim - cond.ndim))
+        return jnp.where(c, a, b)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def _reinit_zero(reinit, h):
+    """Zero the ``h`` rows of workers whose churn ``join`` fires this step
+    (``reinit`` a () or (n,) bool) — applied BEFORE aggregation, and kept
+    even on a degraded step (the freeze selects back to the post-reinit
+    state, so a re-joining worker's fresh row survives)."""
+    return _where_rows(reinit, tree_zeros_like(h), h)
+
+
+def _participant_gate(part, valid=None):
+    """THE participant-selection rule of one aggregation round: the (n,)
+    bool of workers whose ``h_worker``/EF row advances — scheduled
+    participants (the PART_FOLD mask), on a non-degraded step, whose wire
+    checksum (when faults are armed) verified.  Shared by the per-leaf and
+    bucketed reference paths (and mirrored scalar-wise by the distributed
+    rounds), so participant selection cannot fork between layouts."""
+    gate = part.mask & part.ok
+    if valid is not None:
+        gate = gate & valid
+    return gate
+
+
+def _masked_server_tail(comp, h_f, total, n_workers, part, m_eff):
+    """The sampled-sum server epilogue on ONE flat f32 buffer/leaf:
+    the direction uses the RESCALED participant sum (unbiasedness), the
+    server memory the UNRESCALED ``sum/n`` (which preserves the invariant
+    ``h = mean_i h_i`` — only participants' ``h_i`` advanced), and BOTH
+    freeze on a degraded step (``ghat = 0``: skip-update)."""
+    scale = direction_scale(part.spec, m_eff, part.ok)
+    ghat = jnp.where(part.ok, comp.server_direction(h_f, total * scale),
+                     jnp.zeros_like(h_f))
+    new_h = jnp.where(part.ok, comp.next_server_memory(h_f, total / n_workers),
+                      h_f)
+    return ghat, new_h
 
 
 def _is_payload(t) -> bool:
@@ -253,13 +323,17 @@ def _gather_payloads(payload_tree, axis_names):
     return jax.tree_util.tree_map(gather_leaf, payload_tree, is_leaf=_is_payload)
 
 
-def _gathered_mean(payload_tree, like, n_workers: int, axis_names, comp: Compressor):
-    """mean_i decode(payload_i) without materialising n dense copies.
+def _gathered_sum(payload_tree, like, n_workers: int, axis_names,
+                  comp: Compressor, mask=None):
+    """sum_i decode(payload_i) without materialising n dense copies.
 
     All-gathers the compressed payload (cheap: n * bits_per_dim * d / 8 bytes)
     and decodes through the compressor's :meth:`decode_sum` — the fused Pallas
     unpack+reduce for kernel-backed operators, a sequential f32 accumulate
     otherwise — so peak memory stays at one dense gradient regardless of n.
+    With a participation ``mask``, non-participants' payload rows are zeroed
+    first (:meth:`Payload.mask_workers`) so they contribute an exact 0 to the
+    unchanged recurrence.
     """
     gathered = _gather_payloads(payload_tree, axis_names)
 
@@ -268,18 +342,34 @@ def _gathered_mean(payload_tree, like, n_workers: int, axis_names, comp: Compres
 
     outs = []
     for pay, l in zip(pay_leaves, like_leaves):
-        total = comp.decode_sum(pay, n_workers, l.size)
-        outs.append((total / n_workers).reshape(l.shape).astype(l.dtype))
+        if mask is not None:
+            pay = pay.mask_workers(mask)
+        outs.append(comp.decode_sum(pay, n_workers, l.size))
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
-def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_workers):
+def _gathered_mean(payload_tree, like, n_workers: int, axis_names, comp: Compressor):
+    """mean_i decode(payload_i), shaped/typed like ``like``."""
+    totals = _gathered_sum(payload_tree, like, n_workers, axis_names, comp)
+    return jax.tree_util.tree_map(
+        lambda t, l: (t / n_workers).reshape(l.shape).astype(l.dtype),
+        totals, like,
+    )
+
+
+def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names,
+                     n_workers, part=None):
     """The core Algorithm-1 round on LOCAL arrays (no sharding decisions).
 
     grads_local leaves may have any shape — they are flattened locally; the
     h leaves are flat ``(1, d_local)`` / ``(d_local,)``.  ``axis_names`` are
     the (manual) worker axes the packed payload is gathered over.  All
     operator behaviour dispatches through the configured compressor's hooks.
+    With a participation ctx (``part``), the round is the sampled-sum
+    generalisation: every worker still encodes (fixed-shape SPMD), but
+    non-participants' gathered payloads decode to exact zeros, the server
+    tail rescales, and excluded/frozen state is kept by explicit selects
+    (DESIGN.md §Elasticity).
     """
     comp = cfg.make()
 
@@ -289,6 +379,8 @@ def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_wo
     h_local = jax.tree_util.tree_map(
         lambda h: h[0].astype(jnp.float32), h_worker
     )
+    if part is not None:
+        h_local = _reinit_zero(part.reinit_own, h_local)
 
     delta = jax.tree_util.tree_map(comp.compress_input, g_flat, h_local)
     if comp.replicate_perleaf:
@@ -310,21 +402,44 @@ def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names, n_wo
         treedef, [comp.decode(p, leaf.size) for p, leaf in zip(payloads, leaves)]
     )
 
-    dhat_mean = _gathered_mean(payload_tree, g_flat, n_workers, axis_names, comp)
+    if part is None:
+        dhat_mean = _gathered_mean(payload_tree, g_flat, n_workers, axis_names, comp)
 
-    new_h_local = jax.tree_util.tree_map(
-        lambda h, dh, dl: comp.next_memory(h, dh, dl).astype(cfg.h_dtype),
-        h_local, dhat_own, delta,
-    )
-    new_hw = jax.tree_util.tree_map(lambda h: h[None], new_h_local)
-    new_h_server = jax.tree_util.tree_map(
-        lambda h, dm: comp.next_server_memory(h.astype(jnp.float32), dm).astype(cfg.h_dtype),
-        h_server, dhat_mean,
-    )
-    ghat_flat = jax.tree_util.tree_map(
-        lambda h, dm: comp.server_direction(h.astype(jnp.float32), dm),
-        h_server, dhat_mean,
-    )
+        new_h_local = jax.tree_util.tree_map(
+            lambda h, dh, dl: comp.next_memory(h, dh, dl).astype(cfg.h_dtype),
+            h_local, dhat_own, delta,
+        )
+        new_hw = jax.tree_util.tree_map(lambda h: h[None], new_h_local)
+        new_h_server = jax.tree_util.tree_map(
+            lambda h, dm: comp.next_server_memory(h.astype(jnp.float32), dm).astype(cfg.h_dtype),
+            h_server, dhat_mean,
+        )
+        ghat_flat = jax.tree_util.tree_map(
+            lambda h, dm: comp.server_direction(h.astype(jnp.float32), dm),
+            h_server, dhat_mean,
+        )
+    else:
+        # Sampled sum: per-leaf payloads carry no wire checksum, so the
+        # effective set is the scheduled mask itself.
+        totals = _gathered_sum(payload_tree, g_flat, n_workers, axis_names,
+                               comp, mask=part.mask)
+        hs_leaves, hs_def = jax.tree_util.tree_flatten(h_server)
+        served = [
+            _masked_server_tail(comp, h.astype(jnp.float32), t, n_workers,
+                                part, part.mask)
+            for h, t in zip(hs_leaves, jax.tree_util.tree_leaves(totals))
+        ]
+        ghat_flat = jax.tree_util.tree_unflatten(hs_def, [g for g, _ in served])
+        new_h_server = jax.tree_util.tree_unflatten(
+            hs_def, [h.astype(cfg.h_dtype) for _, h in served])
+        advance = part.m_own & part.ok
+        new_h_local = _where_rows(
+            advance,
+            jax.tree_util.tree_map(comp.next_memory, h_local, dhat_own, delta),
+            h_local,
+        )
+        new_hw = jax.tree_util.tree_map(
+            lambda h: h.astype(cfg.h_dtype)[None], new_h_local)
 
     # Reshape only — ghat stays f32; the caller casts to the gradient dtypes
     # AFTER the (optional) downlink round, so the downlink compresses the
@@ -359,7 +474,8 @@ def _gather_fused(payload: Payload, axis_names):
     return unfuse_payload(_gather_field(buf, axis_names), recipe)
 
 
-def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names, n_workers):
+def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names,
+                        n_workers, part=None, faults=None, step=None):
     """Algorithm-1 round on the WHOLE model as one flat buffer.
 
     The single-vector formulation of the paper: grads flatten once into the
@@ -369,6 +485,15 @@ def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names, n
     updates on the flat ``h`` buffers.  Bitwise-equal to
     :func:`_aggregate_local` (the bucketed hooks reproduce the per-leaf PRNG
     schedule and f32 recurrences — see repro.core.bucket).
+
+    With a participation ctx (``part``) the server tail is the sampled-sum
+    generalisation (see :func:`_aggregate_local`).  With ``faults`` armed,
+    the payload ALWAYS fuses into one uint8 wire buffer, an 8-byte checksum
+    is appended (:func:`repro.core.bucket.add_checksum`), the worker's own
+    scheduled faults are injected, and the gathered wires verify on every
+    receiver — invalid payloads are excluded from the sum exactly like
+    non-participants, and the sender's ``h_i`` freezes (the verdict is
+    replicated, so the sender knows its payload was discarded).
     """
     layout = bucket_layout(cfg, grads_local)
     comp = bucketed_compressor(cfg, layout)
@@ -376,25 +501,52 @@ def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names, n
 
     g_flat = layout.flatten(grads_local)                 # (Dp,) f32
     h_local = h_worker[0].astype(jnp.float32)            # (Dp,)
+    if part is not None:
+        h_local = jnp.where(part.reinit_own, jnp.zeros_like(h_local), h_local)
     delta = comp.compress_input(g_flat, h_local)
 
     payload = comp.compress(delta, key)                  # ONE Payload
     dhat_own = comp.decode(payload, dp)
 
-    gathered = _gather_fused(payload, axis_names)        # ONE collective
-    # Fused server tail: decode_sum + mean + direction + memory update in one
-    # hook — ONE kernel launch for kernel-backed operators (the epilogue runs
-    # on the accumulator tile), the bitwise-identical hook composition
-    # otherwise.
-    ghat_flat, new_hs_f = comp.decode_sum_apply(
-        gathered, n_workers, dp, h_server.astype(jnp.float32)
-    )
-    new_hw = comp.next_memory(h_local, dhat_own, delta).astype(cfg.h_dtype)[None]
-    new_hs = new_hs_f.astype(cfg.h_dtype)
-    # f32 leaves — the caller casts to the gradient dtypes after the
-    # (optional) downlink round, like the per-leaf path.
-    ghat = layout.unflatten(ghat_flat, cast=False)
-    return ghat, new_hw, new_hs
+    if part is None and faults is None:
+        gathered = _gather_fused(payload, axis_names)    # ONE collective
+        # Fused server tail: decode_sum + mean + direction + memory update in
+        # one hook — ONE kernel launch for kernel-backed operators (the
+        # epilogue runs on the accumulator tile), the bitwise-identical hook
+        # composition otherwise.
+        ghat_flat, new_hs_f = comp.decode_sum_apply(
+            gathered, n_workers, dp, h_server.astype(jnp.float32)
+        )
+        new_hw = comp.next_memory(h_local, dhat_own, delta).astype(cfg.h_dtype)[None]
+        new_hs = new_hs_f.astype(cfg.h_dtype)
+        # f32 leaves — the caller casts to the gradient dtypes after the
+        # (optional) downlink round, like the per-leaf path.
+        ghat = layout.unflatten(ghat_flat, cast=False)
+        return ghat, new_hw, new_hs
+
+    valid = None
+    if faults is not None:
+        buf = fuse_payload(payload)                      # always fuse: the
+        # checksum covers the WHOLE wire object, single-field shortcut or not
+        wire = apply_faults(add_checksum(buf), faults, step, part.widx)
+        flat, valid = verify_checksum(_gather_field(wire, axis_names))
+        gathered = unfuse_payload(flat.reshape(-1, *buf.shape),
+                                  payload_recipe(payload))
+    else:
+        gathered = _gather_fused(payload, axis_names)
+
+    m_eff = part.mask if valid is None else part.mask & valid
+    total = comp.decode_sum(gathered.mask_workers(m_eff), n_workers, dp)
+    ghat_flat, new_hs_f = _masked_server_tail(
+        comp, h_server.astype(jnp.float32), total, n_workers, part, m_eff)
+    gate = part.m_own & part.ok
+    if valid is not None:
+        gate = gate & jnp.any(valid & (jnp.arange(n_workers) == part.widx))
+    new_h_local = jnp.where(gate, comp.next_memory(h_local, dhat_own, delta),
+                            h_local)
+    return (layout.unflatten(ghat_flat, cast=False),
+            new_h_local.astype(cfg.h_dtype)[None],
+            new_hs_f.astype(cfg.h_dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -496,6 +648,10 @@ def aggregate_shardmap(
     params_local=None,
     vr_force_refresh=None,
     down_key=None,
+    part_key=None,
+    step=None,
+    worker_index=None,
+    faults=None,
 ):
     """One DIANA aggregation round inside a shard_map body.
 
@@ -546,6 +702,21 @@ def aggregate_shardmap(
     stored in this shard-local flat layout, which is self-consistent step to
     step (its global ordering is internal state, never interpreted).
 
+    With a non-trivial ``participation`` spec on the config/policy the round
+    is ELASTIC (DESIGN.md §Elasticity): callers must supply
+
+    * ``part_key = fold_in(step_key, PART_FOLD)`` — derived BEFORE the
+      worker fold, like ``down_key`` (the (n,) mask is identical on every
+      worker);
+    * ``worker_index`` — this worker's linear index (a traced scalar is
+      fine: own-bit extraction is an elementwise one-hot reduce);
+    * ``step`` — the scalar step counter, required when the spec has a churn
+      schedule (and always with ``faults``).
+
+    ``faults`` (a :class:`~repro.core.participation.FaultPlan`, may be
+    empty) arms the wire checksum; it requires the flat BUCKETED layout
+    (the checksum rides the fused uint8 wire buffer).
+
     Returns ``(ghat, new_state)`` with ``ghat`` identical on all workers and
     shaped/sharded like ``grads_local``.
     """
@@ -553,6 +724,29 @@ def aggregate_shardmap(
     inner_axes = tuple(inner_axes)
     policy, cfg = _split_spec(cfg)
     vr_p = policy.vr_p if policy is not None else cfg.vr_p
+
+    spec = _resolve_participation(policy, cfg)
+    if spec is None and faults is not None:
+        spec = ParticipationSpec()  # checksum-only mode: all-true mask,
+        # exclusion algebra driven purely by checksum verdicts
+    part = None
+    if spec is not None:
+        assert part_key is not None, (
+            "elastic aggregation needs part_key = fold_in(step_key, "
+            "PART_FOLD) derived BEFORE the worker fold (identical on all "
+            "workers)")
+        assert worker_index is not None, (
+            "elastic aggregation needs worker_index (this worker's linear "
+            "index on the worker mesh axes)")
+        if spec.churn or faults is not None:
+            assert step is not None, (
+                "a churn schedule / fault plan needs the scalar step counter")
+        part = step_ctx(spec, part_key, n_workers,
+                        0 if step is None else step, worker_index)
+    if faults is not None:
+        assert policy is None and cfg.bucketed, (
+            "fault injection rides the bucketed fused wire buffer — use a "
+            "flat cfg with bucketed=True")
 
     grads_in = grads_local
     new_vr = state.vr
@@ -571,6 +765,13 @@ def aggregate_shardmap(
         coins = vr_coin(key, vr_p)[None]
         if vr_force_refresh is not None:
             coins = coins | jnp.asarray(vr_force_refresh, bool)
+        if part is not None:
+            # Frozen-memory rule: a non-participant's (snapshot, mu) must not
+            # advance, and nothing advances on a degraded step.  Gated on the
+            # SCHEDULED mask only — never the checksum verdict: a corrupted
+            # wire is receiver-side, the local snapshot refresh already
+            # happened (repro.core.vr).
+            coins = coins & (part.m_own & part.ok)
         new_vr = refresh(
             state.vr, coins, params_local,
             jax.tree_util.tree_map(lambda g: g[None], mu_cand),
@@ -581,13 +782,14 @@ def aggregate_shardmap(
             grads_in, state, key, policy,
             axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
             grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
-            down_key=down_key,
+            down_key=down_key, part=part,
         )
     else:
         ghat, new_hw, new_hs = _dispatch_round(
             grads_in, state, key, cfg,
             axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
             grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
+            part=part, faults=faults, step=step,
         )
         new_h_down = state.h_down
         if state.h_down is not None:
@@ -596,6 +798,14 @@ def aggregate_shardmap(
                 "DOWN_FOLD) derived BEFORE the worker fold (identical on all "
                 "workers)")
             ghat, new_h_down = downlink_round(ghat, state.h_down, down_key, cfg)
+            if part is not None:
+                # Degraded step: nothing to broadcast — the downlink memory
+                # freezes and ghat stays zero.  (On non-degraded steps every
+                # worker — participant or not — advances the replicated
+                # h_down: the broadcast is modelled as received by all.)
+                new_h_down = _where_rows(part.ok, new_h_down, state.h_down)
+                ghat = jax.tree_util.tree_map(
+                    lambda g: jnp.where(part.ok, g, jnp.zeros_like(g)), ghat)
     # The round (and the downlink, when on) ran in f32 — the bits the
     # reference path produces; restore the caller's gradient dtypes here so
     # the optimizer state layout is independent of the vr/downlink flags.
@@ -615,6 +825,7 @@ def _pspec_leaf(s) -> bool:
 def _aggregate_grouped(
     grads_local, state, key, policy: CompressionPolicy, *,
     axis_names, n_workers, inner_axes, grad_specs, h_specs, mesh, down_key,
+    part=None,
 ):
     """One aggregation round of a GROUPED policy inside the shard_map body.
 
@@ -629,29 +840,39 @@ def _aggregate_grouped(
     of the server direction through their own downlink compressor before the
     merge.  Returns ``(ghat, h_worker, h_server, h_down)`` with the state
     trees as group-name dicts (matching :func:`_init_grouped`).
+
+    Participation is POLICY-level: the one ctx (``part``, resolved by the
+    caller from the pre-group-fold PART_FOLD stream) applies to every group
+    — a worker is in or out of the whole step, never of one group — so the
+    mask draw count is independent of the group structure.
     """
-    part = partition_for(policy, grads_local)
-    g_groups = part.split(grads_local)
-    spec_groups = (part.split(grad_specs, is_leaf=_pspec_leaf)
+    part_ = partition_for(policy, grads_local)
+    g_groups = part_.split(grads_local)
+    spec_groups = (part_.split(grad_specs, is_leaf=_pspec_leaf)
                    if grad_specs is not None else None)
-    hspec_groups = (part.split(h_specs, is_leaf=_pspec_leaf)
+    hspec_groups = (part_.split(h_specs, is_leaf=_pspec_leaf)
                     if h_specs is not None else None)
 
     ghat_groups = []
     new_hw, new_hs, new_hd = {}, {}, {}
-    for g, gname in enumerate(part.group_names):
-        cfg_g = part.configs[g]
+    for g, gname in enumerate(part_.group_names):
+        cfg_g = part_.configs[g]
         comp = cfg_g.make()
         gkey = jax.random.fold_in(key, GROUP_FOLD + g)
         hw_g, hs_g = state.h_worker[gname], state.h_server[gname]
-        if comp.prefers_allreduce:
+        if comp.prefers_allreduce and part is None:
+            # identity's pmean fast path only without participation: the
+            # masked round must gather + mask + decode_sum (the reference
+            # recurrence), which also brings identity under the bitwise
+            # contract whenever a mask is live
             ghat_g = [
                 jax.lax.pmean(gr, axis_names) if axis_names else gr
                 for gr in g_groups[g]
             ]
         elif cfg_g.bucketed:
             ghat_g, hw_g, hs_g = _aggregate_bucketed(
-                g_groups[g], hw_g, hs_g, gkey, cfg_g, axis_names, n_workers)
+                g_groups[g], hw_g, hs_g, gkey, cfg_g, axis_names, n_workers,
+                part=part)
         else:
             ghat_g, hw_g, hs_g = _perleaf_round(
                 g_groups[g], hw_g, hs_g, gkey, cfg_g,
@@ -659,32 +880,40 @@ def _aggregate_grouped(
                 inner_axes=inner_axes,
                 grad_specs=spec_groups[g] if spec_groups is not None else None,
                 h_specs=hspec_groups[g] if hspec_groups is not None else None,
-                mesh=mesh)
-        dcfg = part.down_configs[g]
+                mesh=mesh, part=part)
+        dcfg = part_.down_configs[g]
         if dcfg is not None:
             assert down_key is not None, (
                 "a policy with downlink rules needs down_key = "
                 "fold_in(step_key, DOWN_FOLD) derived BEFORE the worker fold")
-            ghat_g, new_hd[gname] = downlink_round(
+            ghat_g, hd_g = downlink_round(
                 ghat_g, state.h_down[gname],
                 jax.random.fold_in(down_key, GROUP_FOLD + g), cfg_g,
                 dcfg=dcfg, h_dtype=policy.h_dtype)
+            if part is not None:
+                hd_g = _where_rows(part.ok, hd_g, state.h_down[gname])
+                ghat_g = jax.tree_util.tree_map(
+                    lambda x: jnp.where(part.ok, x, jnp.zeros_like(x)), ghat_g)
+            new_hd[gname] = hd_g
         ghat_groups.append(ghat_g)
         new_hw[gname] = hw_g
         new_hs[gname] = hs_g
-    ghat = part.merge(ghat_groups)
+    ghat = part_.merge(ghat_groups)
     return ghat, new_hw, new_hs, (new_hd if new_hd else None)
 
 
 def _dispatch_round(
     grads_local, state, key, cfg, *,
     axis_names, n_workers, inner_axes, grad_specs, h_specs, mesh,
+    part=None, faults=None, step=None,
 ):
     """Route one (possibly control-variated) gradient tree through the
     layout-appropriate Algorithm-1 round; returns ``(ghat, new_hw, new_hs)``."""
     comp = cfg.make()
-    if comp.prefers_allreduce:
-        # dense stateless payload: the gathered mean IS a fused all-reduce
+    if comp.prefers_allreduce and part is None:
+        # dense stateless payload: the gathered mean IS a fused all-reduce.
+        # Under participation the masked gather+decode_sum path runs instead
+        # — identity then joins the bitwise reference contract.
         ghat = jax.tree_util.tree_map(
             lambda g: jax.lax.pmean(g, axis_names) if axis_names else g,
             grads_local,
@@ -700,26 +929,32 @@ def _dispatch_round(
         # work, tracked in DESIGN.md §Perf.
         return _aggregate_bucketed(
             grads_local, state.h_worker, state.h_server, key, cfg,
-            axis_names, n_workers,
+            axis_names, n_workers, part=part, faults=faults, step=step,
         )
 
     return _perleaf_round(
         grads_local, state.h_worker, state.h_server, key, cfg,
         axis_names=axis_names, n_workers=n_workers, inner_axes=inner_axes,
-        grad_specs=grad_specs, h_specs=h_specs, mesh=mesh,
+        grad_specs=grad_specs, h_specs=h_specs, mesh=mesh, part=part,
     )
 
 
 def _perleaf_round(grads_local, h_worker, h_server, key, cfg, *,
-                   axis_names, n_workers, inner_axes, grad_specs, h_specs, mesh):
+                   axis_names, n_workers, inner_axes, grad_specs, h_specs,
+                   mesh, part=None):
     """The per-leaf Algorithm-1 round, nested-manual where the toolchain and
     caller-provided specs allow (DESIGN.md §6), local otherwise.  Shared by
     the flat path and by each per-leaf GROUP of a grouped policy (whose trees
     are leaf lists — any pytree works)."""
-    if not inner_axes or grad_specs is None:
-        # single-device / tests: everything already local
+    if not inner_axes or grad_specs is None or part is not None:
+        # single-device / tests: everything already local.  Participation
+        # also takes this branch: the ctx's traced mask arrays cannot ride
+        # the nested-manual body's closure, and under GSPMD auto inner axes
+        # the local round is correct (the nested-manual mode is a perf
+        # specialisation, not a semantics change).
         return _aggregate_local(
             grads_local, h_worker, h_server, key, cfg, axis_names, n_workers,
+            part=part,
         )
 
     from jax.sharding import PartitionSpec as P
@@ -806,6 +1041,8 @@ def reference_step(
     vr_aux=None,
     params=None,
     vr_force_refresh=None,
+    step=None,
+    faults=None,
 ):
     """Aggregate stacked per-worker grads (n, ...) exactly as Algorithm 1.
 
@@ -838,10 +1075,32 @@ def reference_step(
     re-trace its body on every call — the unrolled ops dispatch faster, and
     under jit both forms compile to the same per-worker program.
 
+    With a non-trivial ``participation`` spec the round is ELASTIC: the
+    (n,) mask draws from ``fold_in(key, PART_FOLD)`` — the identical stream
+    the distributed path receives as ``part_key`` — and ``step`` (default 0)
+    drives the churn schedule.  ``faults`` arms the wire checksum exactly as
+    in :func:`aggregate_shardmap` (flat bucketed configs only).
+
     Returns (v, new_state): ``v = beta*v + ghat`` — caller does the prox step.
     """
     policy, cfg = _split_spec(cfg)
     vr_p = policy.vr_p if policy is not None else cfg.vr_p
+
+    spec = _resolve_participation(policy, cfg)
+    if spec is None and faults is not None:
+        spec = ParticipationSpec()
+    part = None
+    if spec is not None:
+        if spec.churn or faults is not None:
+            assert step is not None, (
+                "a churn schedule / fault plan needs the step= kwarg")
+        nw = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
+        part = step_ctx(spec, jax.random.fold_in(key, PART_FOLD), nw,
+                        0 if step is None else step)
+    if faults is not None:
+        assert policy is None and cfg.bucketed, (
+            "fault injection rides the bucketed fused wire buffer — use a "
+            "flat cfg with bucketed=True")
 
     new_vr = state.vr
     if state.vr is not None:
@@ -857,55 +1116,72 @@ def reference_step(
         coins = reference_coins(key, vr_p, nw)
         if vr_force_refresh is not None:
             coins = coins | jnp.asarray(vr_force_refresh, bool)
+        if part is not None:
+            # Snapshots refresh only for participants on a non-degraded step
+            # — the scheduled mask, never the wire-checksum verdict (the
+            # distributed coins are drawn before the gather).
+            coins = coins & _participant_gate(part)
         new_vr = refresh(state.vr, coins, params, mu_cand)
 
     if policy is not None:
         ghat, new_hw, new_hs, new_hd = _reference_grouped(
-            grads_per_worker, state, key, policy)
+            grads_per_worker, state, key, policy, part=part)
         v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
         return v, state._replace(h_worker=new_hw, h_server=new_hs, v=v,
                                  vr=new_vr, h_down=new_hd)
 
     if cfg.bucketed:
         ghat, new_hw, new_hs = _reference_agg_bucketed(
-            grads_per_worker, state.h_worker, state.h_server, key, cfg)
+            grads_per_worker, state.h_worker, state.h_server, key, cfg,
+            part=part, faults=faults, step=step)
     else:
         ghat, new_hw, new_hs = _reference_agg_perleaf(
-            grads_per_worker, state.h_worker, state.h_server, key, cfg)
+            grads_per_worker, state.h_worker, state.h_server, key, cfg,
+            part=part)
     new_state = state._replace(h_worker=new_hw, h_server=new_hs)
-    return _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta)
+    return _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta,
+                             part=part)
 
 
-def _reference_grouped(grads_per_worker, state, key, policy: CompressionPolicy):
+def _reference_grouped(grads_per_worker, state, key, policy: CompressionPolicy,
+                       part=None):
     """The reference-path mirror of :func:`_aggregate_grouped`: the same
     partition, the same per-group sub-rounds, the same
     ``fold_in(worker_key, GROUP_FOLD+g)`` draws (the group fold is applied
     AFTER the worker fold on both paths) and the same per-group downlink
     streams ``fold_in(fold_in(key, DOWN_FOLD), GROUP_FOLD+g)`` — so grouped
     distributed and reference runs stay bitwise-aligned for every
-    non-identity operator (identity keeps its documented pmean exemption)."""
-    part = partition_for(policy, grads_per_worker)
-    g_groups = part.split(grads_per_worker)
+    non-identity operator (identity keeps its documented pmean exemption —
+    which, like the distributed side, is suspended whenever a participation
+    ctx is live, because a masked round must run the gather+decode_sum
+    recurrence).  The ONE policy-level ``part`` ctx applies to every group."""
+    part_ = partition_for(policy, grads_per_worker)
+    g_groups = part_.split(grads_per_worker)
     ghat_groups = []
     new_hw, new_hs, new_hd = {}, {}, {}
-    for g, gname in enumerate(part.group_names):
-        cfg_g = part.configs[g]
+    for g, gname in enumerate(part_.group_names):
+        cfg_g = part_.configs[g]
         hw_g, hs_g = state.h_worker[gname], state.h_server[gname]
         agg = (_reference_agg_bucketed if cfg_g.bucketed
                else _reference_agg_perleaf)
         ghat_g, hw_g, hs_g = agg(g_groups[g], hw_g, hs_g, key, cfg_g,
-                                 gfold=GROUP_FOLD + g)
-        dcfg = part.down_configs[g]
+                                 gfold=GROUP_FOLD + g, part=part)
+        dcfg = part_.down_configs[g]
         if dcfg is not None:
-            ghat_g, new_hd[gname] = downlink_round(
+            ghat_g, hd_g = downlink_round(
                 ghat_g, state.h_down[gname],
                 jax.random.fold_in(jax.random.fold_in(key, DOWN_FOLD),
                                    GROUP_FOLD + g),
                 cfg_g, dcfg=dcfg, h_dtype=jnp.float32)
+            if part is not None:
+                hd_g = _where_rows(part.ok, hd_g, state.h_down[gname])
+                ghat_g = jax.tree_util.tree_map(
+                    lambda x: jnp.where(part.ok, x, jnp.zeros_like(x)), ghat_g)
+            new_hd[gname] = hd_g
         ghat_groups.append(ghat_g)
         new_hw[gname] = hw_g
         new_hs[gname] = hs_g
-    return part.merge(ghat_groups), new_hw, new_hs, (new_hd if new_hd else None)
+    return part_.merge(ghat_groups), new_hw, new_hs, (new_hd if new_hd else None)
 
 
 def _worker_key(key, w, gfold):
@@ -920,12 +1196,20 @@ def _worker_key(key, w, gfold):
 
 
 def _reference_agg_perleaf(grads_per_worker, h_worker, h_server, key, cfg,
-                           gfold=None):
+                           gfold=None, part=None):
     """The per-leaf reference AGGREGATION on any pytree of stacked per-worker
     grads (full trees on the flat path, leaf lists per policy group);
-    returns ``(ghat, new_h_worker, new_h_server)``."""
+    returns ``(ghat, new_h_worker, new_h_server)``.  With a participation
+    ctx the round is the sampled-sum generalisation of
+    :func:`_aggregate_local`: churn-join rows re-init first, every worker
+    still encodes, non-participants' stacked payload rows decode to exact
+    zeros (:meth:`Payload.mask_workers`), the server tail runs
+    :func:`_masked_server_tail` and only :func:`_participant_gate` rows
+    advance their memory."""
     comp = cfg.make()
     n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
+    if part is not None:
+        h_worker = _reinit_zero(part.reinit, h_worker)
 
     payload_trees = []
     new_h_rows = []
@@ -959,12 +1243,30 @@ def _reference_agg_perleaf(grads_per_worker, h_worker, h_server, key, cfg,
     )
     pay_leaves = jax.tree_util.tree_leaves(stacked, is_leaf=_is_payload)
     hs_leaves = jax.tree_util.tree_leaves(h_server)
-    served = [
-        comp.decode_sum_apply(pay, n, l.size, hs)
-        for pay, l, hs in zip(pay_leaves, like_leaves, hs_leaves)
-    ]
+    if part is None:
+        served = [
+            comp.decode_sum_apply(pay, n, l.size, hs)
+            for pay, l, hs in zip(pay_leaves, like_leaves, hs_leaves)
+        ]
+        new_hw = jax.tree_util.tree_map(
+            lambda *rows: jnp.stack(rows), *new_h_rows)
+    else:
+        # Sampled sum — the same decode_sum + _masked_server_tail composition
+        # as the distributed masked round (per-leaf payloads carry no wire
+        # checksum, so the effective set is the scheduled mask).
+        served = [
+            _masked_server_tail(
+                comp, hs.astype(jnp.float32),
+                comp.decode_sum(pay.mask_workers(part.mask), n, l.size),
+                n, part, part.mask)
+            for pay, l, hs in zip(pay_leaves, like_leaves, hs_leaves)
+        ]
+        new_hw = _where_rows(
+            _participant_gate(part),
+            jax.tree_util.tree_map(lambda *rows: jnp.stack(rows), *new_h_rows),
+            h_worker,
+        )
     ghat_flat = jax.tree_util.tree_unflatten(treedef, [g for g, _ in served])
-    new_hw = jax.tree_util.tree_map(lambda *rows: jnp.stack(rows), *new_h_rows)
     new_hs = jax.tree_util.tree_unflatten(treedef, [h for _, h in served])
     ghat = jax.tree_util.tree_map(
         lambda f, g: f.reshape(g.shape[1:]), ghat_flat, grads_per_worker
@@ -972,23 +1274,30 @@ def _reference_agg_perleaf(grads_per_worker, h_worker, h_server, key, cfg,
     return ghat, new_hw, new_hs
 
 
-def _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta):
+def _reference_finish(ghat, state, new_state, new_vr, key, cfg, beta,
+                      part=None):
     """Shared reference tail: the downlink round (when configured) on the
     param-shaped ``ghat`` — the SAME :func:`downlink_round` the distributed
     path runs, with the same ``fold_in(key, DOWN_FOLD)`` stream — then the
-    momentum accumulate ``v = beta*v + ghat``."""
+    momentum accumulate ``v = beta*v + ghat``.  On a degraded elastic step
+    the downlink memory freezes and ``ghat`` re-zeros (the broadcast carries
+    nothing), mirroring the distributed flat tail."""
     new_h_down = state.h_down
     if state.h_down is not None:
         ghat, new_h_down = downlink_round(
             ghat, state.h_down, jax.random.fold_in(key, DOWN_FOLD), cfg,
             h_dtype=jnp.float32,
         )
+        if part is not None:
+            new_h_down = _where_rows(part.ok, new_h_down, state.h_down)
+            ghat = jax.tree_util.tree_map(
+                lambda g: jnp.where(part.ok, g, jnp.zeros_like(g)), ghat)
     v = jax.tree_util.tree_map(lambda v0, g: beta * v0 + g, state.v, ghat)
     return v, new_state._replace(v=v, vr=new_vr, h_down=new_h_down)
 
 
 def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
-                            gfold=None):
+                            gfold=None, part=None, faults=None, step=None):
     """The bucketed reference AGGREGATION (uplink only — downlink and
     momentum live in the callers' shared tails): scan over workers, each
     round ONE compress on the flattened model (or policy group); ONE fused
@@ -1006,6 +1315,8 @@ def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
     comp = bucketed_compressor(cfg, layout)
     dp = layout.padded_size
     n = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
+    if part is not None:
+        h_worker = _reinit_zero(part.reinit, h_worker)
 
     def worker_round(_, xs):
         w, g_row, h_row = xs
@@ -1019,6 +1330,32 @@ def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
         worker_round, None,
         (jnp.arange(n), grads_per_worker, h_worker),
     )
-    ghat_flat, new_hs = comp.decode_sum_apply(stacked, n, dp, h_server)
-    ghat = layout.unflatten(ghat_flat, cast=False)  # f32, like the per-leaf ref
-    return ghat, new_h, new_hs
+    if part is None and faults is None:
+        ghat_flat, new_hs = comp.decode_sum_apply(stacked, n, dp, h_server)
+        # f32, like the per-leaf ref
+        ghat = layout.unflatten(ghat_flat, cast=False)
+        return ghat, new_h, new_hs
+
+    valid = None
+    if faults is not None:
+        # The wire mirror of the distributed fault path: fuse each worker's
+        # own payload, checksum it, inject that worker's scheduled faults,
+        # then verify the stack exactly as every receiver does post-gather.
+        buf0 = fuse_payload(stacked.select(0))
+        wires = [
+            apply_faults(add_checksum(fuse_payload(stacked.select(w))),
+                         faults, step, w)
+            for w in range(n)
+        ]
+        flat, valid = verify_checksum(jnp.stack(wires))
+        gathered = unfuse_payload(flat.reshape(n, *buf0.shape),
+                                  payload_recipe(stacked.select(0)))
+    else:
+        gathered = stacked
+
+    m_eff = part.mask if valid is None else part.mask & valid
+    total = comp.decode_sum(gathered.mask_workers(m_eff), n, dp)
+    ghat_flat, new_hs_f = _masked_server_tail(
+        comp, h_server.astype(jnp.float32), total, n, part, m_eff)
+    new_h = _where_rows(_participant_gate(part, valid), new_h, h_worker)
+    return layout.unflatten(ghat_flat, cast=False), new_h, new_hs_f

@@ -1,0 +1,370 @@
+"""Elastic participation: client sampling, stragglers, churn, fault injection.
+
+DIANA's Algorithm 1 (and Thm. 1) assumes all ``n`` workers report every
+step.  This module generalises the aggregation to a sampled participant set
+``S_t`` while keeping the two properties the reproduction is built on:
+
+* **Unbiased direction** — the server direction uses the RESCALED sum
+  ``(1/|S_t|) * sum_{i in S_t} dhat_i`` (or the a-priori ``1/(n q)`` rule,
+  :attr:`ParticipationSpec.rescale`), so ``E[ghat] = h + E[mean_i dhat_i]``
+  exactly as in the all-workers round.
+* **Memory correctness** — the server invariant ``h = mean_i h_i`` must
+  survive sampling, so ``h_server`` advances with the UNRESCALED
+  ``sum_{S_t} dhat_i / n`` (non-participants contribute an exact 0, and
+  their ``h_i`` rows are frozen — see DESIGN.md §Elasticity).
+
+PRNG contract (the :data:`PART_FOLD` stream): callers derive
+``part_key = fold_in(step_key, PART_FOLD)`` from the step key BEFORE any
+worker fold — like the downlink's DOWN_FOLD — and worker ``i``'s
+participation draws come from ``split(fold_in(part_key, i), 3)``
+(sampling coin, straggler coin, deadline latency).  Both the distributed
+and the reference path draw the full ``(n,)`` mask from this stream, ONCE
+per step and BEFORE any policy-group fold, so the mask is bitwise-shared
+and never collides with a compression, VR or downlink draw.
+
+Churn is a static schedule (:class:`ChurnEvent`): a worker that ``leave``s
+at step ``s`` is absent from every mask at ``t >= s``; a ``join`` at step
+``s`` makes it present again with its ``h_worker`` row re-initialised to
+zero at exactly ``t == s`` (the paper's ``h_i^0 = 0`` choice for a fresh
+worker).  Everything is traced against the scalar ``step``, so the program
+stays a fixed-shape SPMD step for every mask outcome.
+
+The fault-injection harness (:class:`FaultPlan`) perturbs the fused uint8
+wire buffer of the bucketed layout per (step, worker): ``corrupt`` XORs a
+payload byte, ``drop``/``delay`` invalidate the appended checksum
+(:func:`repro.core.bucket.add_checksum`) so the receiver detects and
+excludes the payload instead of letting corrupted bytes poison
+``h_server``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PART_FOLD",
+    "ChurnEvent",
+    "ParticipationSpec",
+    "PartCtx",
+    "participation_mask",
+    "reinit_rows",
+    "direction_scale",
+    "expected_rate",
+    "step_ctx",
+    "FaultEvent",
+    "FaultPlan",
+    "parse_faults",
+    "apply_faults",
+]
+
+# Folded into the UN-worker-folded step key for the participation draws;
+# disjoint from the compression schedule (worker folds then per-leaf splits),
+# from VR_FOLD (applied to worker-folded keys), from DOWN_FOLD and from
+# GROUP_FOLD (applied after the worker fold), so the mask stream is identical
+# on every worker and never collides with any other draw.
+PART_FOLD = 0x5041  # 'PA'
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One scheduled membership change: ``worker`` leaves or (re-)joins the
+    cohort at ``step``.  A ``join`` re-initialises the worker's ``h_worker``
+    row to zero at exactly that step (fresh-worker memory)."""
+
+    step: int
+    worker: int
+    kind: str  # "leave" | "join"
+
+    def __post_init__(self):
+        if self.kind not in ("leave", "join"):
+            raise ValueError(f"ChurnEvent kind must be leave|join, got {self.kind!r}")
+        if self.step < 0 or self.worker < 0:
+            raise ValueError("ChurnEvent step and worker must be >= 0")
+
+
+@dataclass(frozen=True)
+class ParticipationSpec:
+    """Static description of WHO participates each step (hashable: lives on
+    :class:`~repro.core.compression.CompressionConfig` /
+    :class:`~repro.core.policy.CompressionPolicy` and in lru_cache keys).
+
+    q:           client-sampling probability — each present worker joins
+                 ``S_t`` with an independent Bernoulli(q) coin per step.
+    dropout:     straggler probability — a sampled worker still fails to
+                 report with this probability (independent coin).
+    deadline:    timeout policy — each worker draws a latency ~ Exp(1) and
+                 misses the deadline when ``latency > deadline``; ``None``
+                 disables the timeout draw.
+    churn:       static :class:`ChurnEvent` schedule (applied in step order).
+    min_workers: below this many participants the step degrades gracefully:
+                 ``ghat = 0`` (momentum ``v = beta*v`` carries), every memory
+                 frozen — never a crash, never a shape change.
+    rescale:     "sampled" divides the participant sum by ``|S_t|``
+                 (self-normalised, unbiased conditional on ``|S_t|>0``);
+                 "expected" divides by ``n * E[participation rate]`` (the
+                 ``1/(nq)`` rule — unbiased a priori, higher variance).
+
+    A trivial spec (``is_trivial``) keeps the aggregation on the exact
+    pre-elastic code path, bit for bit.
+    """
+
+    q: float = 1.0
+    dropout: float = 0.0
+    deadline: Optional[float] = None
+    churn: Tuple[ChurnEvent, ...] = ()
+    min_workers: int = 1
+    rescale: str = "sampled"
+
+    def __post_init__(self):
+        if not (0.0 < self.q <= 1.0):
+            raise ValueError(f"participation q must be in (0, 1], got {self.q}")
+        if not (0.0 <= self.dropout < 1.0):
+            raise ValueError(f"dropout must be in [0, 1), got {self.dropout}")
+        if self.deadline is not None and self.deadline <= 0.0:
+            raise ValueError(f"deadline must be positive, got {self.deadline}")
+        if self.min_workers < 1:
+            raise ValueError("min_workers must be >= 1")
+        if self.rescale not in ("sampled", "expected"):
+            raise ValueError(f"rescale must be sampled|expected, got {self.rescale}")
+        object.__setattr__(
+            self, "churn",
+            tuple(sorted(self.churn, key=lambda e: (e.step, e.worker))))
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when every scheduled mask is all-workers — the aggregation
+        then takes the exact pre-elastic code path (``min_workers`` is
+        vacuous: ``|S_t| = n`` every step)."""
+        return (self.q >= 1.0 and self.dropout == 0.0
+                and self.deadline is None and not self.churn)
+
+    # ------------------------------------------------------------- json
+    def to_json_dict(self) -> dict:
+        return {
+            "q": self.q, "dropout": self.dropout, "deadline": self.deadline,
+            "min_workers": self.min_workers, "rescale": self.rescale,
+            "churn": [[e.step, e.worker, e.kind] for e in self.churn],
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "ParticipationSpec":
+        d = dict(d)
+        d["churn"] = tuple(ChurnEvent(int(s), int(w), k)
+                           for s, w, k in d.get("churn", ()))
+        return cls(**d)
+
+
+def presence(spec: ParticipationSpec, step, n: int) -> jax.Array:
+    """(n,) bool — cohort membership at ``step`` under the churn schedule
+    (all-present before any event; events applied in step order)."""
+    pres = jnp.ones((n,), bool)
+    step = jnp.asarray(step, jnp.int32)
+    for ev in spec.churn:
+        # elementwise one-hot select: no scatter/dynamic-slice, so the mask
+        # partitions under manual subgroups on old XLA (DESIGN.md §6)
+        hit = (jnp.arange(n) == ev.worker) & (step >= jnp.int32(ev.step))
+        pres = jnp.where(hit, ev.kind == "join", pres)
+    return pres
+
+
+def reinit_rows(spec: ParticipationSpec, step, n: int) -> jax.Array:
+    """(n,) bool — workers whose ``join`` fires at exactly ``step``: their
+    ``h_worker`` row re-initialises to zero this step (before aggregation,
+    and regardless of whether the step degrades)."""
+    r = jnp.zeros((n,), bool)
+    step = jnp.asarray(step, jnp.int32)
+    for ev in spec.churn:
+        if ev.kind == "join":
+            r = r | ((jnp.arange(n) == ev.worker) & (step == jnp.int32(ev.step)))
+    return r
+
+
+def participation_mask(spec: ParticipationSpec, part_key: jax.Array,
+                       n: int, step=0) -> jax.Array:
+    """The (n,) participant mask ``S_t`` — the PART_FOLD stream contract.
+
+    ``part_key`` must be ``fold_in(step_key, PART_FOLD)`` derived BEFORE any
+    worker fold (identical on every worker); the same draws happen whichever
+    knobs are active, so turning one on never perturbs another's stream.
+    """
+    bits = []
+    for i in range(n):
+        k_q, k_drop, k_lat = jax.random.split(jax.random.fold_in(part_key, i), 3)
+        b = jax.random.bernoulli(k_q, spec.q)
+        b = b & ~jax.random.bernoulli(k_drop, spec.dropout)
+        if spec.deadline is not None:
+            b = b & (jax.random.exponential(k_lat) <= spec.deadline)
+        bits.append(b)
+    return jnp.stack(bits) & presence(spec, step, n)
+
+
+def expected_rate(spec: ParticipationSpec) -> float:
+    """A-priori per-worker participation probability (ignoring churn):
+    ``q * (1-dropout) * P[Exp(1) <= deadline]`` — the divisor of the
+    "expected" rescale rule and the bench's effective-bits accounting."""
+    rate = spec.q * (1.0 - spec.dropout)
+    if spec.deadline is not None:
+        rate *= 1.0 - math.exp(-spec.deadline)
+    return rate
+
+
+def direction_scale(spec: ParticipationSpec, mask: jax.Array,
+                    ok: jax.Array) -> jax.Array:
+    """Scalar f32 the participant SUM is multiplied by to form the server
+    direction's mean — ``1/|S_t|`` (sampled) or ``1/(n * E[rate])``
+    (expected); exactly 0 on a degraded step so ``ghat`` vanishes."""
+    n = mask.shape[0]
+    if spec.rescale == "expected":
+        s = jnp.float32(1.0 / (n * expected_rate(spec)))
+    else:
+        count = jnp.sum(mask, dtype=jnp.int32)
+        s = 1.0 / jnp.maximum(count, 1).astype(jnp.float32)
+    return jnp.where(ok, s, jnp.float32(0.0))
+
+
+class PartCtx(NamedTuple):
+    """One step's resolved participation context, computed ONCE per step
+    (before any policy-group fold) and shared by every aggregation group.
+
+    ``m_own``/``reinit_own``/``widx`` are the calling worker's own bits,
+    extracted with an elementwise one-hot reduce (never a dynamic slice) —
+    ``None`` on the reference path, which indexes the (n,) rows directly.
+    """
+
+    spec: Any            # static ParticipationSpec
+    mask: jax.Array      # (n,) bool — scheduled participants S_t
+    reinit: jax.Array    # (n,) bool — h rows re-initialised this step
+    ok: jax.Array        # ()  bool — |S_t| >= min_workers (degraded gate)
+    dir_scale: jax.Array  # () f32 — multiplies the participant sum (0 if degraded)
+    m_own: Any = None
+    reinit_own: Any = None
+    widx: Any = None
+
+
+def step_ctx(spec: ParticipationSpec, part_key: jax.Array, n: int,
+             step=0, worker_index=None) -> PartCtx:
+    """Resolve one step's mask/reinit/degraded-gate/rescale from the
+    PART_FOLD stream.  ``worker_index`` (the caller's linear worker index)
+    populates the ``*_own`` bits on the distributed path."""
+    mask = participation_mask(spec, part_key, n, step)
+    reinit = reinit_rows(spec, step, n)
+    ok = jnp.sum(mask, dtype=jnp.int32) >= jnp.int32(spec.min_workers)
+    scale = direction_scale(spec, mask, ok)
+    m_own = reinit_own = widx = None
+    if worker_index is not None:
+        widx = jnp.asarray(worker_index, jnp.int32)
+        sel = jnp.arange(n) == widx
+        m_own = jnp.any(mask & sel)
+        reinit_own = jnp.any(reinit & sel)
+    return PartCtx(spec=spec, mask=mask, reinit=reinit, ok=ok,
+                   dir_scale=scale, m_own=m_own, reinit_own=reinit_own,
+                   widx=widx)
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: perturb the fused uint8 wire buffer per (step, worker)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled wire fault for ``worker`` at ``step``.
+
+    kind="corrupt": XOR ``bits`` into payload byte ``byte`` — the checksum
+    then fails on every receiver and the payload is excluded from the sum.
+    kind="drop":    invalidate the checksum outright (the payload never
+    arrives); kind="delay" is a drop lasting ``delay`` consecutive steps.
+    """
+
+    step: int
+    worker: int
+    kind: str = "corrupt"  # "corrupt" | "drop" | "delay"
+    byte: int = 0
+    bits: int = 0xFF
+    delay: int = 1
+
+    def __post_init__(self):
+        if self.kind not in ("corrupt", "drop", "delay"):
+            raise ValueError(f"FaultEvent kind must be corrupt|drop|delay, "
+                             f"got {self.kind!r}")
+        if self.kind == "corrupt" and not (1 <= self.bits <= 0xFF):
+            raise ValueError("corrupt bits must be a non-zero byte")
+        if self.kind == "delay" and self.delay < 1:
+            raise ValueError("delay must be >= 1 steps")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Static fault schedule.  Passing ANY plan (even an empty one) turns the
+    wire checksum on: the bucketed round always fuses the payload into one
+    uint8 buffer, appends the 8-byte checksum
+    (:func:`repro.core.bucket.add_checksum`) and excludes payloads whose
+    checksum fails verification on the receivers."""
+
+    events: Tuple[FaultEvent, ...] = field(default_factory=tuple)
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+
+def parse_faults(text: Optional[str]) -> Optional[FaultPlan]:
+    """CLI fault syntax -> :class:`FaultPlan` (``None`` passes through).
+
+    Events separated by ';', each ``kind:key=value,...`` — e.g.
+    ``corrupt:step=3,worker=1,byte=7;drop:step=5,worker=2`` or
+    ``delay:step=6,worker=0,delay=2``.  The bare word ``checksum`` yields an
+    empty plan (checksums on, no injected faults).
+    """
+    if text is None or not text.strip():
+        return None
+    if text.strip() == "checksum":
+        return FaultPlan()
+    events = []
+    for part in text.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, rest = part.partition(":")
+        kw = {}
+        for item in rest.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            k, _, v = item.partition("=")
+            kw[k.strip()] = int(v, 0)
+        events.append(FaultEvent(kind=kind.strip(), **kw))
+    return FaultPlan(events=tuple(events))
+
+
+def apply_faults(wire: jax.Array, plan: FaultPlan, step, widx) -> jax.Array:
+    """Inject ``plan``'s faults into THIS worker's 1-D wire buffer
+    ``(payload bytes + checksum tail)`` for the traced ``(step, widx)``.
+
+    Pure elementwise XOR against constant one-hot byte masks (fixed shape,
+    no scatter), so the program is identical whether or not a fault fires.
+    """
+    from .bucket import CHECKSUM_BYTES
+
+    step = jnp.asarray(step, jnp.int32)
+    widx = jnp.asarray(widx, jnp.int32)
+    total = wire.shape[-1]
+    body = total - CHECKSUM_BYTES
+    for ev in plan.events:
+        mine = widx == jnp.int32(ev.worker)
+        if ev.kind == "delay":
+            hit = mine & (step >= jnp.int32(ev.step)) \
+                       & (step < jnp.int32(ev.step + ev.delay))
+        else:
+            hit = mine & (step == jnp.int32(ev.step))
+        flip = np.zeros((total,), np.uint8)
+        if ev.kind == "corrupt":
+            flip[ev.byte % body] = ev.bits
+        else:  # drop / delay: break the checksum tail
+            flip[total - 1] = 0xFF
+        wire = wire ^ jnp.where(hit, jnp.asarray(flip), jnp.uint8(0))
+    return wire

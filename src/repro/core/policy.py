@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from .bucket import BucketLayout, GroupedBucketLayout
 from .compression import CompressionConfig
 from .compressors.registry import canonical_name
+from .participation import ParticipationSpec
 
 __all__ = [
     "ChannelSpec",
@@ -164,6 +165,13 @@ class CompressionPolicy:
     vr / vr_p:   VR-DIANA switch.  Model-wide: the L-SVRG control variate is
                  applied to the parameter-shaped gradients BEFORE any grouping
                  (repro.core.vr), so it composes with every rule unchanged.
+    participation: elastic-participation spec
+                 (:class:`~repro.core.participation.ParticipationSpec`).
+                 Model-wide BY CONSTRUCTION: a worker is in or out of the
+                 whole step, never of one group, so the one PART_FOLD mask
+                 draw is shared by every group and never appears on the
+                 per-rule configs (tools/check_policy.py lints that the rule
+                 resolution is participation-independent).
     """
 
     rules: Tuple[Rule, ...] = (Rule(".*", ChannelSpec()),)
@@ -173,6 +181,7 @@ class CompressionPolicy:
     use_kernel: Optional[bool] = None
     vr: bool = False
     vr_p: Optional[float] = None
+    participation: Optional[ParticipationSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "rules", tuple(self.rules))
@@ -184,6 +193,10 @@ class CompressionPolicy:
                              "to two digits for stable dict ordering)")
         if self.vr_p is not None and not 0.0 < self.vr_p <= 1.0:
             raise ValueError(f"vr_p must be in (0, 1], got {self.vr_p}")
+        if self.participation is not None and not isinstance(
+            self.participation, ParticipationSpec
+        ):
+            raise TypeError("participation must be a ParticipationSpec")
 
     # --------------------------------------------------------------- matching
 
@@ -228,7 +241,8 @@ class CompressionPolicy:
                 else _LAYOUTS[0] if cfg.down_bucketed else _LAYOUTS[1])
         return cls(rules=(Rule(".*", spec, down=down),), bucketed=cfg.bucketed,
                    h_dtype=cfg.h_dtype, worker_axes=cfg.worker_axes,
-                   use_kernel=cfg.use_kernel, vr=cfg.vr, vr_p=cfg.vr_p)
+                   use_kernel=cfg.use_kernel, vr=cfg.vr, vr_p=cfg.vr_p,
+                   participation=cfg.participation)
 
     def flat_config(self) -> CompressionConfig:
         """The legacy flat config of a uniform policy (inverse of
@@ -256,6 +270,7 @@ class CompressionPolicy:
             down_k=None if d is None else d.k,
             down_bucketed=None if d is None or d.layout is None
             else d.layout == "bucketed",
+            participation=self.participation,
         )
 
     def representative_config(self) -> CompressionConfig:
@@ -267,7 +282,8 @@ class CompressionPolicy:
         catch = next((i for i, r in enumerate(self.rules) if r.is_catch_all),
                      len(self.rules) - 1)
         cfg = _rule_config(self, catch)
-        return _dc_replace(cfg, vr=self.vr, vr_p=self.vr_p)
+        return _dc_replace(cfg, vr=self.vr, vr_p=self.vr_p,
+                           participation=self.participation)
 
     # ------------------------------------------------------- per-rule configs
 
@@ -370,6 +386,8 @@ class CompressionPolicy:
             doc["vr"] = True
         if self.vr_p is not None:
             doc["vr_p"] = self.vr_p
+        if self.participation is not None:
+            doc["participation"] = self.participation.to_json_dict()
         return doc
 
     def to_json(self) -> str:
@@ -404,6 +422,10 @@ class CompressionPolicy:
             kw["worker_axes"] = tuple(doc["worker_axes"])
         if "h_dtype" in doc:
             kw["h_dtype"] = _H_DTYPES[doc["h_dtype"]]
+        if "participation" in doc:
+            kw["participation"] = (
+                None if doc["participation"] is None
+                else ParticipationSpec.from_json_dict(doc["participation"]))
         return cls(rules=rules, **kw)
 
     @classmethod

@@ -118,7 +118,17 @@ def control_variate(g, g_snapshot, mu):
 
 def vr_coin(worker_key: jax.Array, p: float) -> jax.Array:
     """This worker's Bernoulli(p) snapshot coin (``worker_key`` is already
-    folded with the worker index — the distributed convention)."""
+    folded with the worker index — the distributed convention).
+
+    Elastic rounds gate the coin AFTER drawing it: a non-participant (or any
+    worker on a degraded step) must not refresh its snapshot — its (w_i,
+    mu_i) freezes with the rest of its state — so the aggregation paths AND
+    the coin with the scheduled participation mask
+    (``repro.core.participation``, DESIGN.md §Elasticity).  Gating the
+    drawn coin (rather than skipping the draw) keeps the PRNG schedule
+    fixed-shape: the stream position of every later draw is independent of
+    who participated, and the checksum verdict of a faulty wire payload
+    never reaches the coin (it is drawn before the gather)."""
     return jax.random.bernoulli(jax.random.fold_in(worker_key, VR_FOLD), p)
 
 

@@ -116,20 +116,24 @@ def resolve_policy_arg(cfg, policy) -> CompressionPolicy:
 
 def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: float = 0.9,
                    compression: Optional[CompressionConfig] = None,
-                   policy=None) -> DianaOptimizer:
+                   policy=None, participation=None) -> DianaOptimizer:
     """Build the training optimizer from a model config.
 
     ``policy`` (a :class:`CompressionPolicy` | inline rule string | ``.json``
     path | ``"default"``) selects per-parameter-group compression; without it
     the flat ``cfg.compression``/``comp_*`` fields build the legacy uniform
-    config (bitwise the pre-policy behaviour).
+    config (bitwise the pre-policy behaviour).  ``participation`` (a
+    :class:`~repro.core.participation.ParticipationSpec`) attaches elastic
+    client sampling / dropout / churn to either surface — it is model-wide,
+    so it rides the policy whole (DESIGN.md §Elasticity).
     """
     inner_opt = adamw() if inner == "adamw" else momentum(beta)
     if policy is not None:
         if compression is not None:
             raise ValueError("pass either compression= or policy=, not both")
         return DianaOptimizer(inner=inner_opt, schedule=constant_schedule(lr),
-                              policy=resolve_policy_arg(cfg, policy))
+                              policy=resolve_policy_arg(cfg, policy),
+                              participation=participation)
     comp = compression or CompressionConfig(
         method=cfg.compression,
         p=cfg.comp_p,
@@ -143,7 +147,8 @@ def make_optimizer(cfg, *, lr: float = 3e-4, inner: str = "momentum", beta: floa
         down_method=cfg.comp_down_method,
         down_k=cfg.comp_down_k,
     )
-    return DianaOptimizer(comp, inner_opt, schedule=constant_schedule(lr))
+    return DianaOptimizer(comp, inner_opt, schedule=constant_schedule(lr),
+                          participation=participation)
 
 
 # ---------------------------------------------------------------------------
@@ -314,8 +319,15 @@ def _inner_shardings(inner_shape, p_shard, mesh):
 # The step
 # ---------------------------------------------------------------------------
 
-def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Optional[int] = None):
-    """Returns a jitted ``step(params, opt_state, batch, key) -> (params, opt_state, metrics)``."""
+def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Optional[int] = None,
+                     faults=None):
+    """Returns a jitted ``step(params, opt_state, batch, key) -> (params, opt_state, metrics)``.
+
+    ``faults`` (a :class:`~repro.core.participation.FaultPlan`) arms the
+    wire checksum on the aggregation round — corrupted payloads are detected
+    and excluded (DESIGN.md §Elasticity).  Requires the flat bucketed layout
+    (the checksum rides the fused uint8 wire buffer).
+    """
     mesh, waxes = resolve_train_mesh(mesh, opt.policy.worker_axes)
     opt = resolve_bucketed(opt, mesh, waxes)
     # What the aggregation round runs: the policy itself.  Uniform policies
@@ -374,6 +386,22 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
 
                 down_kwargs = dict(down_key=jax.random.fold_in(key, DOWN_FOLD))
 
+            part_kwargs = {}
+            if comp.participation is not None or faults is not None:
+                # Elastic round: the participation mask is drawn from the
+                # step key folded with PART_FOLD — like down_key, BEFORE the
+                # worker fold below, so every worker sees the identical (n,)
+                # mask.  The step counter drives the churn schedule / fault
+                # plan; widx locates this worker's own bit.
+                from repro.core.diana import PART_FOLD
+
+                part_kwargs = dict(
+                    part_key=jax.random.fold_in(key, PART_FOLD),
+                    step=opt_state.step,
+                    worker_index=widx[0],
+                    faults=faults,
+                )
+
             wkey = jax.random.fold_in(key, widx[0])
             # Nested fully-manual aggregation where the toolchain supports
             # it; otherwise keep the inner axes auto (GSPMD constraints) —
@@ -393,6 +421,7 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
                 mesh=mesh,
                 **vr_kwargs,
                 **down_kwargs,
+                **part_kwargs,
             )
             if waxes:
                 loss = jax.lax.pmean(loss, waxes)
@@ -531,6 +560,26 @@ def main(argv=None):
     ap.add_argument("--vr-p", type=float, default=None,
                     help="L-SVRG snapshot-refresh probability; default is the "
                          "paper's 1/m with m = the per-worker batch size")
+    ap.add_argument("--participation-q", type=float, default=None,
+                    help="elastic rounds: independent per-worker sampling "
+                         "probability q (partial participation; the masked "
+                         "sum is rescaled to stay unbiased).  Default 1.0 "
+                         "keeps the exact pre-elastic path")
+    ap.add_argument("--participation-dropout", type=float, default=None,
+                    help="straggler model: probability a sampled worker "
+                         "misses the round deadline and is dropped (its "
+                         "DIANA memory freezes; the rescale stays unbiased)")
+    ap.add_argument("--min-workers", type=int, default=None,
+                    help="degraded-step floor: with fewer than this many "
+                         "participants the round applies no update (ghat=0, "
+                         "all state frozen) instead of a high-variance step")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection plan: ';'-separated "
+                         "'kind:step=S,worker=W[,byte=B|delay=D]' events with "
+                         "kind in {drop,delay,corrupt} (e.g. "
+                         "'corrupt:step=3,worker=1'), or the bare word "
+                         "'checksum' to arm the wire checksum with no "
+                         "injected faults.  Requires the bucketed layout")
     ap.add_argument("--mesh", default=None, help="e.g. 2x2 (data x model) or 2x2x2")
     ap.add_argument("--reduced", action="store_true", help="toy config for CPU runs")
     ap.add_argument("--batch", type=int, default=None, help="override global batch")
@@ -575,11 +624,29 @@ def main(argv=None):
         cfg = dc_replace(cfg, vr=True,
                          vr_p=resolve_vr_p(args.vr_p, m_local))
 
+    participation = None
+    if (args.participation_q is not None or args.participation_dropout is not None
+            or args.min_workers is not None):
+        from repro.core.participation import ParticipationSpec
+
+        participation = ParticipationSpec(
+            q=1.0 if args.participation_q is None else args.participation_q,
+            dropout=args.participation_dropout or 0.0,
+            min_workers=args.min_workers or 1,
+        )
+    from repro.core.participation import parse_faults
+
+    faults = parse_faults(args.faults)
+    if faults is not None and (args.per_leaf_agg or not cfg.comp_bucketed
+                               or args.comp_policy):
+        raise SystemExit("--faults needs the flat bucketed layout (the "
+                         "checksum rides the fused wire buffer)")
+
     opt = make_optimizer(cfg, lr=args.lr, inner=args.inner,
-                         policy=args.comp_policy)
+                         policy=args.comp_policy, participation=participation)
     key = jax.random.PRNGKey(0)
     params, opt_state, _ = init_train_state(cfg, opt, mesh, key)
-    step_fn = build_train_step(cfg, opt, mesh, shape)
+    step_fn = build_train_step(cfg, opt, mesh, shape, faults=faults)
     smesh, _ = resolve_train_mesh(mesh, opt.policy.worker_axes)
 
     from repro.launch.sharding_rules import batch_specs as bspecs

@@ -66,6 +66,12 @@ class DianaOptimizer:
       a downlink channel to every rule; ``init`` grows the downlink memory
       ``h_down`` and the training step must feed a worker-independent
       ``down_key`` (launch/train.py does).
+
+    ``participation=`` (not deprecated) attaches an elastic
+    :class:`~repro.core.participation.ParticipationSpec` via
+    ``policy.replace(participation=...)``; the training step must then feed
+    ``part_key``/``step``/``worker_index`` through ``aggregate_shardmap``
+    (launch/train.py does — DESIGN.md §Elasticity).
     """
 
     def __init__(
@@ -80,6 +86,7 @@ class DianaOptimizer:
         vr_p: Optional[float] = None,
         down_method: Optional[str] = None,
         down_k: Optional[int] = None,
+        participation=None,
     ):
         if policy is not None and compression is not None:
             raise ValueError("pass either compression= (flat config) or "
@@ -104,6 +111,12 @@ class DianaOptimizer:
                 "— prefer policy.with_down(method=..., k=...)",
                 DeprecationWarning, stacklevel=2)
             policy = policy.with_down(method=down_method, k=down_k)
+        if participation is not None:
+            # Not a shim — participation is model-wide like vr, and this is
+            # its canonical attachment point: the elastic spec rides the
+            # policy so every consumer (aggregation, checkpoint metadata,
+            # the CLI) sees one source of truth.
+            policy = policy.replace(participation=participation)
         self.policy = policy
         self.inner = inner
         self.schedule = schedule or constant_schedule(lr)

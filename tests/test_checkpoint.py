@@ -145,3 +145,86 @@ def test_pre_downlink_checkpoint_into_downlink_template_hints(tmp_path):
     with pytest.raises(KeyError, match="h_down"):
         restore_checkpoint(str(tmp_path),
                            {"diana": _diana_state(True, False, down=True)})
+
+
+# ---------------------------------------------------------------------------
+# Elastic state: mid-churn round-trip + participation restore hint
+# ---------------------------------------------------------------------------
+
+def _elastic_spec():
+    from repro.core import ChurnEvent, ParticipationSpec
+
+    return ParticipationSpec(q=0.5, dropout=0.2, min_workers=2,
+                             churn=(ChurnEvent(1, 2, "leave"),
+                                    ChurnEvent(3, 2, "join")))
+
+
+def test_elastic_state_roundtrip_mid_churn(tmp_path):
+    """A DianaState saved MID-CHURN (after a worker left, before it
+    re-joined) round-trips exactly — the frozen row included — and the
+    elastic spec itself rides the manifest metadata via the serialized
+    policy, so a restore can rebuild both state and schedule."""
+    from repro.core import (CompressionConfig, as_policy, reference_init,
+                            reference_step)
+    from repro.checkpoint import load_metadata
+
+    spec = _elastic_spec()
+    cfg = CompressionConfig(method="diana", block_size=16, bucketed=True,
+                            participation=spec)
+    params = {"w": jnp.ones((6, 4)) * 0.5, "b": jnp.zeros((10,))}
+    key = jax.random.PRNGKey(3)
+    state = reference_init(params, cfg, 4)
+    for t in range(2):  # worker 2 leaves at step 1: step 1 runs masked
+        grads = jax.tree_util.tree_map(
+            lambda p: jnp.ones((4,) + p.shape) * 0.25, params)
+        _, state = reference_step(grads, state, jax.random.fold_in(key, t),
+                                  cfg, step=t)
+    policy_doc = as_policy(cfg).to_json_dict()
+    save_checkpoint(str(tmp_path), 2, {"diana": state},
+                    metadata={"policy": policy_doc})
+    restored, step = restore_checkpoint(str(tmp_path), {"diana": state})
+    assert step == 2
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the spec survives the manifest round-trip
+    from repro.core import CompressionPolicy
+
+    meta = load_metadata(str(tmp_path))
+    assert CompressionPolicy.from_json_dict(meta["policy"]).participation == spec
+    # ...and the trajectory continues bitwise from the restored state
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones((4,) + p.shape) * 0.25, params)
+    v_a, _ = reference_step(grads, state, jax.random.fold_in(key, 2), cfg, step=2)
+    v_b, _ = reference_step(grads, restored["diana"], jax.random.fold_in(key, 2),
+                            cfg, step=2)
+    for a, b in zip(jax.tree_util.tree_leaves(v_a), jax.tree_util.tree_leaves(v_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_participation_restore_hint_on_spec_change(tmp_path):
+    """Changing the elastic spec between save and restore cannot be caught
+    by state-shape checks (participation adds no leaves), so the dedicated
+    hint compares the manifest policy against the restore template's: a
+    mismatch names both specs, matching specs (or both-trivial) stay silent."""
+    from repro.core import CompressionConfig, ParticipationSpec, as_policy
+    from repro.checkpoint import participation_restore_hint
+
+    spec = _elastic_spec()
+    cfg = CompressionConfig(method="diana", block_size=16, participation=spec)
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(2)},
+                    metadata={"policy": as_policy(cfg).to_json_dict()})
+    # same spec: no hint
+    assert participation_restore_hint(str(tmp_path), as_policy(cfg)) is None
+    # changed spec: hint names the mismatch
+    changed = CompressionConfig(method="diana", block_size=16,
+                                participation=ParticipationSpec(q=0.25))
+    hint = participation_restore_hint(str(tmp_path), as_policy(changed))
+    assert hint is not None and "participation" in hint and "0.25" in hint
+    # dropped spec entirely: also hinted
+    plain = CompressionConfig(method="diana", block_size=16)
+    assert participation_restore_hint(str(tmp_path), as_policy(plain)) is not None
+    # pre-elastic checkpoint (no policy metadata) + trivial template: silent
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(2)})
+    assert participation_restore_hint(str(tmp_path), as_policy(plain)) is None

@@ -1,0 +1,586 @@
+"""Elastic DIANA — partial participation, stragglers, churn and wire faults
+(DESIGN.md §Elasticity).
+
+Contracts under test:
+
+* the PART_FOLD mask stream: deterministic, identical on every worker, and
+  independent of every other PRNG consumer (enabling participation never
+  perturbs the compressor/VR/downlink draws);
+* unbiased masked aggregation: the server direction rescales the participant
+  sum (``n/|S_t|`` sampled, ``1/(n q)`` expected) while ``h_server`` always
+  advances with the UNRESCALED ``sum/n`` (the invariant ``h = mean_i h_i``);
+* frozen memory: a non-participant's ``h_worker``/VR rows do not move; a
+  churn re-join re-initialises its row to zero; a degraded step
+  (``|S_t| < min_workers``) freezes EVERYTHING and returns ``ghat = 0``;
+* acceptance: ``aggregate_shardmap == reference_step`` BITWISE on a real
+  4-worker mesh under sampling + straggler dropout + churn, for all five
+  registry operators, per-leaf and bucketed, VR on/off, downlink on/off;
+* multi-step trajectories stay bitwise across 5 steps in exact arithmetic
+  (grid gradients, dyadic alpha/scales — the same FMA-contraction discipline
+  as the seed's tests, see ``kernels/ref.py::ref_apply_server``);
+* convergence law: DIANA under q=0.5 sampling still reaches the exact
+  optimum (the rescaled estimator is unbiased and the memory drift argument
+  survives intermittent updates); memoryless QSGD under the same sampling
+  stalls at its variance floor;
+* fault harness: a corrupted wire payload is detected by the bucket
+  checksum and excluded from the sum WITHOUT perturbing ``h_server`` — the
+  step is bitwise the step in which that worker had left the cohort.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    ChurnEvent,
+    FaultEvent,
+    FaultPlan,
+    PART_FOLD,
+    ParticipationSpec,
+    expected_rate,
+    parse_faults,
+    participation_mask,
+    reference_init,
+    reference_step,
+    step_ctx,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KEY = jax.random.PRNGKey(11)
+
+from tests.test_downlink import OPERATORS, _grid  # noqa: E402  (shared fixtures)
+
+
+def _fixture(n=4, key=KEY):
+    params = {"w": _grid(jax.random.fold_in(key, 0), (12, 5)),
+              "b": _grid(jax.random.fold_in(key, 1), (9,))}
+    grads = {
+        k: _grid(jax.random.fold_in(key, 10 + i), (n,) + v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    return params, grads
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Spec + mask unit contracts
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_and_triviality():
+    with pytest.raises(ValueError):
+        ParticipationSpec(q=0.0)
+    with pytest.raises(ValueError):
+        ParticipationSpec(dropout=1.0)
+    with pytest.raises(ValueError):
+        ParticipationSpec(min_workers=0)
+    assert ParticipationSpec().is_trivial
+    assert not ParticipationSpec(q=0.5).is_trivial
+    assert not ParticipationSpec(churn=(ChurnEvent(2, 1, "leave"),)).is_trivial
+    # min_workers alone is vacuous: |S_t| = n every step
+    assert ParticipationSpec(min_workers=3).is_trivial
+
+
+def test_spec_json_round_trip():
+    spec = ParticipationSpec(q=0.5, dropout=0.25, min_workers=2,
+                             churn=(ChurnEvent(3, 1, "leave"),
+                                    ChurnEvent(5, 1, "join")),
+                             rescale="expected")
+    assert ParticipationSpec.from_json_dict(spec.to_json_dict()) == spec
+
+
+def test_mask_is_deterministic_and_stream_isolated():
+    """Same part_key -> same mask; the PART_FOLD stream never collides with
+    the worker-fold streams the compressors draw from."""
+    spec = ParticipationSpec(q=0.5, dropout=0.2)
+    pk = jax.random.fold_in(KEY, PART_FOLD)
+    m1 = participation_mask(spec, pk, 8)
+    m2 = participation_mask(spec, pk, 8)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    assert m1.shape == (8,) and m1.dtype == jnp.bool_
+    # a different step key gives a different draw (not a constant mask)
+    masks = [participation_mask(
+        spec, jax.random.fold_in(jax.random.fold_in(KEY, t), PART_FOLD), 8)
+        for t in range(32)]
+    assert len({tuple(np.asarray(m).tolist()) for m in masks}) > 1
+
+
+def test_churn_schedule_presence_and_reinit():
+    spec = ParticipationSpec(churn=(ChurnEvent(2, 3, "leave"),
+                                    ChurnEvent(5, 3, "join")))
+    pk = jax.random.fold_in(KEY, PART_FOLD)
+    for t, present in [(0, True), (1, True), (2, False), (4, False), (5, True)]:
+        ctx = step_ctx(spec, pk, 4, t)
+        assert bool(ctx.mask[3]) == present, t
+        assert bool(ctx.reinit[3]) == (t == 5), t
+
+
+def test_direction_scale_rules():
+    pk = jax.random.fold_in(KEY, PART_FOLD)
+    # sampled: n-independent 1/|S_t| on the sum = n/|S_t| on the mean
+    spec = ParticipationSpec(churn=(ChurnEvent(0, 0, "leave"),))
+    ctx = step_ctx(spec, pk, 4, 0)
+    assert float(ctx.dir_scale) == pytest.approx(1.0 / 3.0)
+    # expected: 1/(n * rate), mask-independent
+    spec_e = ParticipationSpec(q=0.5, dropout=0.2, rescale="expected")
+    assert expected_rate(spec_e) == pytest.approx(0.4)
+    ctx_e = step_ctx(spec_e, pk, 4, 0)
+    assert float(ctx_e.dir_scale) == pytest.approx(1.0 / (4 * 0.4))
+    # degraded: scale exactly 0, ok False
+    spec_d = ParticipationSpec(min_workers=4,
+                               churn=(ChurnEvent(0, 0, "leave"),))
+    ctx_d = step_ctx(spec_d, pk, 4, 0)
+    assert not bool(ctx_d.ok) and float(ctx_d.dir_scale) == 0.0
+
+
+def test_parse_faults_cli_syntax():
+    assert parse_faults(None) is None
+    assert parse_faults("checksum") == FaultPlan()
+    plan = parse_faults("corrupt:step=3,worker=1,byte=7;drop:step=5,worker=2")
+    assert plan.events[0] == FaultEvent(step=3, worker=1, kind="corrupt", byte=7)
+    assert plan.events[1] == FaultEvent(step=5, worker=2, kind="drop")
+
+
+# ---------------------------------------------------------------------------
+# Reference-path semantics: unbiasedness, freezing, reinit, degraded steps
+# ---------------------------------------------------------------------------
+
+def _cfg(bucketed=False, **kw):
+    return CompressionConfig(method="diana", p=math.inf, block_size=16,
+                             bucketed=bucketed, **kw)
+
+
+@pytest.mark.parametrize("bucketed", [False, True], ids=["perleaf", "bucketed"])
+def test_full_participation_active_spec_is_bitwise_baseline(bucketed):
+    """A NON-trivial spec whose mask happens to be all-true (a churn event
+    far in the future) takes the masked code path with ``|S_t| = n`` — and
+    must reproduce the pre-elastic path bit for bit (n=4 makes 1/|S| and
+    1/n the same dyadic scale)."""
+    params, grads = _fixture()
+    base = _cfg(bucketed)
+    active = _cfg(bucketed,
+                  participation=ParticipationSpec(
+                      churn=(ChurnEvent(1000, 0, "leave"),)))
+    assert active.participation is not None and not active.participation.is_trivial
+    v0, s0 = reference_step(grads, reference_init(params, base, 4), KEY, base)
+    v1, s1 = reference_step(grads, reference_init(params, active, 4), KEY,
+                            active, step=0)
+    _assert_trees_equal(v0, v1, "ghat")
+    _assert_trees_equal(s0.h_worker, s1.h_worker, "h_worker")
+    _assert_trees_equal(s0.h_server, s1.h_server, "h_server")
+
+
+@pytest.mark.parametrize("bucketed", [False, True], ids=["perleaf", "bucketed"])
+def test_nonparticipant_memory_frozen_and_h_server_unrescaled(bucketed):
+    """Worker 3 leaves at step 0: its h row never moves, the other rows
+    advance exactly as in a run where worker 3's gradient is zeroed AND the
+    direction is rescaled by n/|S| — while h_server advances with the
+    UNRESCALED participant sum / n."""
+    params, grads = _fixture()
+    cfg = _cfg(bucketed, alpha=0.5,
+               participation=ParticipationSpec(
+                   churn=(ChurnEvent(0, 3, "leave"),)))
+    state = reference_init(params, cfg, 4)
+    leaves = jax.tree_util.tree_leaves
+    h3_before = [np.asarray(l[3]) for l in leaves(state.h_worker)]
+    v, ns = reference_step(grads, state, KEY, cfg, step=0)
+    for l, before in zip(leaves(ns.h_worker), h3_before):
+        np.testing.assert_array_equal(np.asarray(l[3]), before,
+                                      err_msg="row 3 moved")
+    # participants' rows DID move (alpha=0.5, non-zero grid grads)
+    assert any(float(jnp.abs(l[w]).max()) > 0
+               for l in leaves(ns.h_worker) for w in range(3))
+    # h_server == mean of worker rows (the memory invariant, mask or not)
+    for hs, hw in zip(leaves(ns.h_server), leaves(ns.h_worker)):
+        np.testing.assert_allclose(np.asarray(hs),
+                                   np.asarray(jnp.mean(hw, axis=0)),
+                                   rtol=0, atol=1e-7)
+    # worker 3's gradient never contributes: perturbing it changes nothing
+    grads_pert = dict(grads, w=grads["w"].at[3].add(1000.0))
+    v_pert, ns_pert = reference_step(grads_pert, reference_init(params, cfg, 4),
+                                     KEY, cfg, step=0)
+    _assert_trees_equal(v, v_pert, "non-participant gradient leaked into ghat")
+    _assert_trees_equal(ns.h_server, ns_pert.h_server,
+                        "non-participant gradient leaked into h_server")
+
+
+@pytest.mark.parametrize("bucketed", [False, True], ids=["perleaf", "bucketed"])
+def test_rejoin_reinitialises_memory_row(bucketed):
+    """Worker 2 leaves at step 1 and re-joins at step 3: at step 3 its
+    ``h_worker`` row restarts FROM ZERO (the server has no record of a
+    returning worker's stale memory), then advances like any participant."""
+    params, grads = _fixture()
+    cfg = _cfg(bucketed, alpha=0.5,
+               participation=ParticipationSpec(
+                   churn=(ChurnEvent(1, 2, "leave"), ChurnEvent(3, 2, "join"))))
+    state = reference_init(params, cfg, 4)
+    leaves = jax.tree_util.tree_leaves
+    rows2 = []
+    for t in range(4):
+        v, state = reference_step(grads, state,
+                                  jax.random.fold_in(KEY, t), cfg, step=t)
+        rows2.append([np.asarray(h[2]) for h in leaves(state.h_worker)])
+    # step 0: moved; steps 1-2: frozen at the step-0 value
+    assert any(np.abs(r).max() > 0 for r in rows2[0])
+    for r0, r1, r2 in zip(rows2[0], rows2[1], rows2[2]):
+        np.testing.assert_array_equal(r1, r0)
+        np.testing.assert_array_equal(r2, r0)
+    # step 3: re-initialised to zero, then one fresh alpha*Q(g-0) update —
+    # hand-zero row 2 of the pre-step-3 state and replay the step: the
+    # reinit select must land on exactly that trajectory
+    state_pre = reference_init(params, cfg, 4)
+    for t in range(3):
+        _, state_pre = reference_step(grads, state_pre,
+                                      jax.random.fold_in(KEY, t), cfg, step=t)
+    zeroed = state_pre._replace(h_worker=jax.tree_util.tree_map(
+        lambda h: h.at[2].set(0.0), state_pre.h_worker))
+    _, state_z = reference_step(grads, zeroed, jax.random.fold_in(KEY, 3),
+                                cfg, step=3)
+    for r3, hz in zip(rows2[3], leaves(state_z.h_worker)):
+        np.testing.assert_array_equal(r3, np.asarray(hz[2]))
+
+
+@pytest.mark.parametrize("bucketed", [False, True], ids=["perleaf", "bucketed"])
+def test_degraded_step_freezes_everything(bucketed):
+    """With 3 of 4 workers gone and ``min_workers=2`` the step degrades:
+    ghat == 0 exactly and EVERY state leaf is bitwise-unchanged."""
+    params, grads = _fixture()
+    cfg = _cfg(bucketed, down_method="diana",
+               participation=ParticipationSpec(
+                   min_workers=2,
+                   churn=(ChurnEvent(0, 1, "leave"), ChurnEvent(0, 2, "leave"),
+                          ChurnEvent(0, 3, "leave"))))
+    state = reference_init(params, cfg, 4)
+    # advance one healthy-looking step first so the state is non-zero...
+    # (churn at step 0 applies from step 0 — instead seed non-zero memory
+    # by hand so the freeze is meaningful)
+    bump = lambda t, d: jax.tree_util.tree_map(lambda h: h + d, t)
+    state = state._replace(
+        h_worker=bump(state.h_worker, 0.25),
+        h_server=bump(state.h_server, 0.25),
+        h_down=bump(state.h_down, 0.125) if state.h_down is not None else None)
+    v, ns = reference_step(grads, state, KEY, cfg, step=0)
+    for leaf in jax.tree_util.tree_leaves(v):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.zeros_like(np.asarray(leaf)))
+    _assert_trees_equal(ns.h_worker, state.h_worker, "h_worker moved")
+    _assert_trees_equal(ns.h_server, state.h_server, "h_server moved")
+    _assert_trees_equal(ns.h_down, state.h_down, "h_down moved")
+
+
+# ---------------------------------------------------------------------------
+# Fault harness: checksum detection == cohort exclusion
+# ---------------------------------------------------------------------------
+
+def test_corrupt_payload_excluded_bitwise_like_churn_leave():
+    """A corrupt fault on worker 1 produces EXACTLY the step produced by a
+    churn schedule in which worker 1 had left: same ghat, same h_server,
+    same surviving h rows — the checksum-excluded payload touches nothing.
+    (VR off: the local snapshot coin is gated on the SCHEDULED mask only,
+    which legitimately differs between the two runs.)"""
+    params, grads = _fixture()
+    cfg = _cfg(bucketed=True)
+    plan = FaultPlan(events=(FaultEvent(step=0, worker=1, kind="corrupt"),))
+    v_f, ns_f = reference_step(grads, reference_init(params, cfg, 4), KEY, cfg,
+                               step=0, faults=plan)
+    cfg_churn = _cfg(bucketed=True,
+                     participation=ParticipationSpec(
+                         churn=(ChurnEvent(0, 1, "leave"),)))
+    v_c, ns_c = reference_step(grads, reference_init(params, cfg_churn, 4),
+                               KEY, cfg_churn, step=0)
+    _assert_trees_equal(v_f, v_c, "ghat")
+    _assert_trees_equal(ns_f.h_server, ns_c.h_server, "h_server")
+    for hf, hc in zip(jax.tree_util.tree_leaves(ns_f.h_worker),
+                      jax.tree_util.tree_leaves(ns_c.h_worker)):
+        for w in (0, 2, 3):
+            np.testing.assert_array_equal(np.asarray(hf[w]), np.asarray(hc[w]))
+
+
+def test_empty_fault_plan_checksum_is_bitwise_noop():
+    """Arming the checksum with no injected faults (--faults checksum) must
+    not change a single bit of the round."""
+    params, grads = _fixture()
+    cfg = _cfg(bucketed=True)
+    v0, s0 = reference_step(grads, reference_init(params, cfg, 4), KEY, cfg)
+    v1, s1 = reference_step(grads, reference_init(params, cfg, 4), KEY, cfg,
+                            step=0, faults=FaultPlan())
+    _assert_trees_equal(v0, v1, "ghat")
+    _assert_trees_equal(s0.h_worker, s1.h_worker, "h_worker")
+    _assert_trees_equal(s0.h_server, s1.h_server, "h_server")
+
+
+def test_drop_and_delay_faults_exclude_for_scheduled_steps():
+    """delay=2 kills the victim's wire for two consecutive steps: perturbing
+    its gradient ONLY inside that window (its local h is frozen too, on both
+    sides of the comparison) must leave the entire 4-step trajectory —
+    including the post-fault step — bitwise unchanged."""
+    params, grads = _fixture()
+    cfg = _cfg(bucketed=True)
+    grads_pert = dict(grads, w=grads["w"].at[2].add(1000.0))
+    plan = FaultPlan(events=(FaultEvent(step=1, worker=2, kind="delay",
+                                        delay=2),))
+    sa = reference_init(params, cfg, 4)
+    sb = reference_init(params, cfg, 4)
+    for t in range(4):
+        ga, gb = grads, (grads_pert if t in (1, 2) else grads)
+        va, sa = reference_step(ga, sa, jax.random.fold_in(KEY, t), cfg,
+                                step=t, faults=plan)
+        vb, sb = reference_step(gb, sb, jax.random.fold_in(KEY, t),
+                                cfg, step=t, faults=plan)
+        _assert_trees_equal(va, vb, f"ghat leaked at step {t}")
+        _assert_trees_equal(sa.h_worker, sb.h_worker, f"h_worker at step {t}")
+        _assert_trees_equal(sa.h_server, sb.h_server, f"h_server at step {t}")
+
+
+def test_checksum_catches_single_bit_flip():
+    from repro.core.bucket import add_checksum, verify_checksum
+
+    buf = jnp.arange(64, dtype=jnp.uint8)
+    wire = add_checksum(buf)
+    _, ok = verify_checksum(wire[None])
+    assert bool(ok[0])
+    for byte, bits in [(0, 0x01), (13, 0x80), (63, 0xFF)]:
+        bad = wire.at[byte].set(wire[byte] ^ bits)
+        _, ok = verify_checksum(bad[None])
+        assert not bool(ok[0]), (byte, bits)
+    # swapping two unequal bytes changes position-weighted sum, not the sum
+    sw = wire.at[0].set(wire[1]).at[1].set(wire[0])
+    _, ok = verify_checksum(sw[None])
+    assert not bool(ok[0])
+
+
+# ---------------------------------------------------------------------------
+# Convergence law: unbiased sampling converges, memoryless degrades
+# ---------------------------------------------------------------------------
+
+def test_sampled_diana_converges_memoryless_qsgd_stalls():
+    from tests.test_downlink import _run_quadratic
+
+    spec = ParticipationSpec(q=0.5)
+    diana = _run_quadratic(CompressionConfig(
+        method="diana", p=math.inf, block_size=16, participation=spec),
+        steps=1200)
+    qsgd = _run_quadratic(CompressionConfig(
+        method="qsgd", block_size=16, participation=spec), steps=1200)
+    assert diana < 1e-3, f"sampled DIANA should reach the optimum, got {diana}"
+    assert qsgd > 10 * diana, (
+        f"memoryless QSGD under sampling should stall: qsgd={qsgd:.2e} "
+        f"diana={diana:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: distributed == reference bitwise, 4-worker mesh
+# ---------------------------------------------------------------------------
+
+def run_py(code: str, timeout=900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("vr,down", [(False, False), (True, False),
+                                     (False, True), (True, True)],
+                         ids=["plain", "vr", "down", "vr+down"])
+def test_elastic_distributed_bitwise_all_operators(vr, down):
+    """Acceptance: under client sampling + straggler dropout + a churn
+    leave, ``aggregate_shardmap`` over a real 4-worker mesh equals
+    ``reference_step`` BITWISE — ghat and every state leaf — for all five
+    registry operators, per-leaf and bucketed, one step from h=0 (exact at
+    h=0; multi-step exactness is covered by the trajectory test below)."""
+    code = f"""
+import jax, jax.numpy as jnp, numpy as np, json, math
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import (ChurnEvent, CompressionConfig, DianaState,
+                        ParticipationSpec, VRState, aggregate_shardmap,
+                        init_state)
+from repro.core.diana import DOWN_FOLD, PART_FOLD, reference_init, reference_step
+from repro.launch.mesh import make_mesh
+from tests.test_downlink import OPERATORS
+from tests.test_convergence_laws import _vr_fixture
+
+VR, DOWN = {vr!r}, {down!r}
+mesh = make_mesh((4, 1), ("data", "model"))
+n = 4
+key = jax.random.PRNGKey(11)
+tmap, leaves = jax.tree_util.tree_map, jax.tree_util.tree_leaves
+params, grads, snap, mu, g_snap, mu_cand = _vr_fixture(n, key)
+spec = ParticipationSpec(q=0.5, dropout=0.2,
+                         churn=(ChurnEvent(0, 3, "leave"),))
+
+report = {{}}
+for method, kw in OPERATORS:
+    for bucketed in (False, True):
+        cfg = CompressionConfig(
+            method=method, p=math.inf, bucketed=bucketed,
+            participation=spec,
+            down_method=method if DOWN else None,
+            down_k=kw.get("k") if DOWN else None,
+            vr=VR, vr_p=0.5 if VR else None,
+            **{{k: v for k, v in kw.items() if k != "k"}}, k=kw.get("k", 64))
+
+        ref_state = reference_init(params, cfg, n)
+        st = init_state(params, cfg, n)
+        vr_kwargs = {{}}
+        if VR:
+            ref_state = ref_state._replace(
+                vr=ref_state.vr._replace(snapshot=snap, mu=mu))
+            st = st._replace(vr=st.vr._replace(snapshot=snap, mu=mu))
+            vr_kwargs = dict(vr_aux=(g_snap, mu_cand), params=params)
+        v_ref, ref_new = reference_step(grads, ref_state, key, cfg,
+                                        step=0, **vr_kwargs)
+
+        def body(g_st, snap_st, mu_st, gsnap_st, mucand_st, h_w, h_s, h_d, k):
+            own = lambda t: tmap(lambda x: x[0], t)
+            vr_st = VRState(snapshot=snap_st, mu=mu_st) if VR else None
+            stl = DianaState(h_w, h_s, vr_st, h_d if DOWN else None)
+            widx = jax.lax.axis_index("data")
+            wkey = jax.random.fold_in(k, widx)
+            kw2 = dict(vr_aux=(own(gsnap_st), own(mucand_st)),
+                       params_local=params) if VR else {{}}
+            if DOWN:
+                kw2["down_key"] = jax.random.fold_in(k, DOWN_FOLD)
+            ghat, ns = aggregate_shardmap(
+                own(g_st), stl, wkey, cfg, axis_names=("data",), n_workers=n,
+                part_key=jax.random.fold_in(k, PART_FOLD), step=0,
+                worker_index=widx, **kw2)
+            nsnap = ns.vr.snapshot if VR else snap_st
+            nmu = ns.vr.mu if VR else mu_st
+            nhd = ns.h_down if DOWN else h_d
+            return ghat, ns.h_worker, ns.h_server, nhd, nsnap, nmu
+
+        sh = lambda t: tmap(lambda _: P("data"), t)
+        rep = lambda t: tmap(lambda _: P(), t)
+        hd = st.h_down if DOWN else jnp.zeros((1,))
+        hd_spec = tmap(lambda _: P(), hd)
+        fn = shard_map(body, mesh=mesh,
+            in_specs=(sh(grads), sh(snap), sh(mu), sh(g_snap), sh(mu_cand),
+                      tmap(lambda _: P("data"), st.h_worker),
+                      rep(st.h_server), hd_spec, P()),
+            out_specs=(rep(params), tmap(lambda _: P("data"), st.h_worker),
+                       rep(st.h_server), hd_spec, sh(snap), sh(mu)),
+            axis_names={{"data"}}, check_vma=False)
+        ghat, h_w, h_s, h_d, nsnap, nmu = jax.jit(fn)(
+            grads, snap, mu, g_snap, mu_cand,
+            st.h_worker, st.h_server, hd, key)
+
+        errs = {{
+            "g": max(float(jnp.abs(a - b).max()) for a, b in
+                     zip(leaves(ghat), leaves(v_ref))),
+            "hw": max(float(jnp.abs(a - b).max()) for a, b in
+                      zip(leaves(h_w), leaves(ref_new.h_worker))),
+            "hs": max(float(jnp.abs(a - b).max()) for a, b in
+                      zip(leaves(h_s), leaves(ref_new.h_server))),
+        }}
+        if DOWN:
+            errs["hd"] = max(float(jnp.abs(a - b).max()) for a, b in
+                             zip(leaves(h_d), leaves(ref_new.h_down)))
+        if VR:
+            errs["snap"] = max(float(jnp.abs(a - b).max()) for a, b in
+                               zip(leaves(nsnap), leaves(ref_new.vr.snapshot)))
+            errs["mu"] = max(float(jnp.abs(a - b).max()) for a, b in
+                             zip(leaves(nmu), leaves(ref_new.vr.mu)))
+        report[f"{{method}}/{{'bucketed' if bucketed else 'perleaf'}}"] = errs
+print(json.dumps(report))
+"""
+    report = json.loads(run_py(code).strip().splitlines()[-1])
+    assert len(report) == 2 * len(OPERATORS)
+    for pairing, errs in report.items():
+        assert all(v == 0.0 for v in errs.values()), (pairing, errs)
+
+
+@pytest.mark.parametrize("spec_kind", ["churn-dyadic", "expected-rate"])
+def test_elastic_multistep_trajectory_bitwise(spec_kind):
+    """5-step distributed-vs-reference trajectories stay bitwise in EXACT
+    arithmetic: grid gradients, ``alpha=0.5``, ``p=inf`` and a dyadic
+    participation scale (power-of-2 participant counts under a churn-only
+    spec, or the 5/8 'expected' rescale), so the seed's FMA-contraction
+    caveat (``kernels/ref.py::ref_apply_server``) never manifests and every
+    intermediate is exactly representable in both compile contexts."""
+    code = f"""
+import jax, jax.numpy as jnp, numpy as np, json, math
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import (ChurnEvent, CompressionConfig, DianaState,
+                        ParticipationSpec, aggregate_shardmap, init_state)
+from repro.core.diana import PART_FOLD, reference_init, reference_step
+from repro.launch.mesh import make_mesh
+from tests.test_downlink import _grid
+
+KIND = {spec_kind!r}
+if KIND == "churn-dyadic":
+    spec = ParticipationSpec(churn=(
+        ChurnEvent(1, 2, "leave"), ChurnEvent(1, 3, "leave"),
+        ChurnEvent(3, 2, "join"), ChurnEvent(3, 3, "join")))
+else:
+    spec = ParticipationSpec(q=0.5, dropout=0.2, rescale="expected")
+
+mesh = make_mesh((4, 1), ("data", "model"))
+n, steps = 4, 5
+key0 = jax.random.PRNGKey(11)
+tmap, leaves = jax.tree_util.tree_map, jax.tree_util.tree_leaves
+params = {{"w": _grid(jax.random.fold_in(key0, 0), (12, 5)),
+          "b": _grid(jax.random.fold_in(key0, 1), (9,))}}
+
+report = {{}}
+for bucketed in (False, True):
+    cfg = CompressionConfig(method="diana", p=math.inf, block_size=16,
+                            alpha=0.5, bucketed=bucketed, participation=spec)
+    ref_state = reference_init(params, cfg, n)
+    st = init_state(params, cfg, n)
+
+    def body(g_st, h_w, h_s, k, t):
+        widx = jax.lax.axis_index("data")
+        ghat, ns = aggregate_shardmap(
+            tmap(lambda x: x[0], g_st), DianaState(h_w, h_s, None, None),
+            jax.random.fold_in(k, widx), cfg,
+            axis_names=("data",), n_workers=n,
+            part_key=jax.random.fold_in(k, PART_FOLD), step=t,
+            worker_index=widx)
+        return ghat, ns.h_worker, ns.h_server
+
+    sh = lambda t: tmap(lambda _: P("data"), t)
+    rep = lambda t: tmap(lambda _: P(), t)
+    fn = jax.jit(shard_map(body, mesh=mesh,
+        in_specs=(sh(params), tmap(lambda _: P("data"), st.h_worker),
+                  rep(st.h_server), P(), P()),
+        out_specs=(rep(params), tmap(lambda _: P("data"), st.h_worker),
+                   rep(st.h_server)),
+        axis_names={{"data"}}, check_vma=False))
+
+    drift = 0.0
+    h_w, h_s = st.h_worker, st.h_server
+    for t in range(steps):
+        key = jax.random.fold_in(key0, t)
+        grads = {{
+            k2: _grid(jax.random.fold_in(key, 100 + i), (n,) + v.shape)
+            for i, (k2, v) in enumerate(params.items())
+        }}
+        v_ref, ref_state = reference_step(grads, ref_state, key, cfg, step=t)
+        ghat, h_w, h_s = fn(grads, h_w, h_s, key, jnp.int32(t))
+        drift = max(drift, max(float(jnp.abs(a - b).max()) for a, b in
+                               zip(leaves(ghat), leaves(v_ref))))
+        drift = max(drift, max(float(jnp.abs(a - b).max()) for a, b in
+                               zip(leaves(h_w), leaves(ref_state.h_worker))))
+        drift = max(drift, max(float(jnp.abs(a - b).max()) for a, b in
+                               zip(leaves(h_s), leaves(ref_state.h_server))))
+    report["bucketed" if bucketed else "perleaf"] = drift
+print(json.dumps(report))
+"""
+    report = json.loads(run_py(code).strip().splitlines()[-1])
+    assert report == {"perleaf": 0.0, "bucketed": 0.0}, report

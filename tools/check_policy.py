@@ -12,7 +12,10 @@ policy surfaces can never silently rot:
      downlink channels),
    * every ``pattern`` is a valid regex,
    * exactly ONE rule is a catch-all (``*`` / ``.*`` / empty), and it is the
-     LAST rule — so matching is total and no rule is dead by position.
+     LAST rule — so matching is total and no rule is dead by position,
+   * attaching a non-trivial elastic :class:`ParticipationSpec` changes no
+     per-group operator config (participation is model-wide; group
+     resolution must be participation-independent — DESIGN.md §Elasticity).
 
 2. **Coverage checks** (``--no-models`` skips them) — each arch default is
    checked against the arch's actual REDUCED parameter tree via
@@ -46,6 +49,42 @@ def structural_errors(source: str, policy) -> list:
         errors.append(
             f"{source}: the catch-all rule must be LAST (it is rule "
             f"{catch[0]} of {len(policy.rules)}; later rules are dead)")
+    return errors
+
+
+def elasticity_errors(source: str, policy) -> list:
+    """Group resolution is participation-INDEPENDENT (DESIGN.md §Elasticity).
+
+    The elastic spec is model-wide: the one PART_FOLD mask draw covers the
+    whole step, so attaching a non-trivial :class:`ParticipationSpec` must
+    change NOTHING about how rules resolve to per-group operator configs —
+    uplink or downlink, any group count.  A policy that fails here would
+    sample different participants per group (biased sums) or leak the spec
+    into an lru_cache key mid-round; lint it before it trains.
+    """
+    from repro.core.participation import ChurnEvent, ParticipationSpec
+
+    probe = policy.replace(participation=ParticipationSpec(
+        q=0.5, dropout=0.125, min_workers=2,
+        churn=(ChurnEvent(3, 0, "leave"),)))
+    errors = []
+    for i in range(len(policy.rules)):
+        if probe.rule_config(i) != policy.rule_config(i):
+            errors.append(
+                f"{source}: rule {i} UPLINK config changes when an elastic "
+                f"participation spec is attached (got "
+                f"{probe.rule_config(i)}, want {policy.rule_config(i)}) — "
+                f"participation must stay off per-group configs")
+        if probe.rule_down_config(i) != policy.rule_down_config(i):
+            errors.append(
+                f"{source}: rule {i} DOWNLINK config changes when an elastic "
+                f"participation spec is attached — the broadcast is "
+                f"replicated determinism, never a sampled sum")
+    if probe.participation != ParticipationSpec(
+            q=0.5, dropout=0.125, min_workers=2,
+            churn=(ChurnEvent(3, 0, "leave"),)):
+        errors.append(f"{source}: policy.replace(participation=...) did not "
+                      f"round-trip the spec")
     return errors
 
 
@@ -105,6 +144,7 @@ def main(argv=None) -> int:
         policy, arch_errs = load_source(text)
         if policy is not None:
             arch_errs += structural_errors(text, policy)
+            arch_errs += elasticity_errors(text, policy)
             if not args.no_models and not arch_errs:
                 arch_errs += coverage_errors(arch, policy)
         errors += [e.replace(text, f"{arch}.comp_policy", 1) for e in arch_errs]
@@ -114,6 +154,7 @@ def main(argv=None) -> int:
         errors += errs
         if policy is not None:
             errors += structural_errors(source, policy)
+            errors += elasticity_errors(source, policy)
 
     for e in errors:
         print(e)
