@@ -153,14 +153,16 @@ def _timeit_interleaved(cells: dict, reps: int) -> dict:
     return {k: sorted(v)[len(v) // 2] * 1e6 for k, v in ts.items()}
 
 
-def _setup_reference(params, cfg, key):
+def _setup_reference(params, cfg, key, faults=None, node_size=1):
+    del node_size  # reference_step derives the node structure from cfg
     grads = _grads(params, N_WORKERS, key)
     state = reference_init(params, cfg, N_WORKERS)
-    step = jax.jit(lambda g, s, k: reference_step(g, s, k, cfg))
+    kw = dict(step=0, faults=faults) if faults is not None else {}
+    step = jax.jit(lambda g, s, k: reference_step(g, s, k, cfg, **kw))
     return step, (grads, state, key)
 
 
-def _setup_shardmap(params, cfg, key):
+def _setup_shardmap(params, cfg, key, faults=None, node_size=1):
     """The real distributed round over a 4-worker mesh (needs >= 4 devices)."""
     if jax.device_count() < N_WORKERS:
         return None
@@ -181,13 +183,16 @@ def _setup_shardmap(params, cfg, key):
     def body(gs, h_w, h_s, h_d, k):
         g_local = jax.tree_util.tree_map(lambda g: g[0], gs)
         widx = jax.lax.axis_index("data")
-        wkey = jax.random.fold_in(k, widx)
+        # hierarchical: node-folded key (core.diana's caller contract)
+        wkey = jax.random.fold_in(k, widx // node_size)
         kw = dict(down_key=jax.random.fold_in(k, DOWN_FOLD)) if has_down else {}
-        if elastic:
+        if elastic or faults is not None:
             from repro.core.diana import PART_FOLD
 
             kw.update(part_key=jax.random.fold_in(k, PART_FOLD),
                       worker_index=widx)
+        if faults is not None:
+            kw.update(faults=faults, step=jnp.zeros((), jnp.int32))
         ghat, new = aggregate_shardmap(
             g_local, DianaState(h_w, h_s, None, h_d), wkey, cfg,
             axis_names=("data",), n_workers=N_WORKERS, **kw)
@@ -213,7 +218,21 @@ PATHS = {
 }
 
 
-def collect(smoke: bool = False):
+def _resolved_layout(cfg) -> str:
+    """What layout ``resolve_bucketed`` actually runs on the bench mesh —
+    surfaced per row so a toolchain downgrade (old XLA forcing per-leaf)
+    is visible in the committed JSON instead of silently skewing a
+    'bucketed' column."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.train import resolved_layout
+    from repro.optim import DianaOptimizer
+
+    n = N_WORKERS if jax.device_count() >= N_WORKERS else 1
+    mesh = make_mesh((n, 1), ("data", "model"))
+    return resolved_layout(DianaOptimizer(compression=cfg), mesh, ("data",))
+
+
+def collect(smoke: bool = False, faults: bool = False):
     reps = 5 if smoke else 15
     key = jax.random.PRNGKey(0)
     rows = []
@@ -240,11 +259,13 @@ def collect(smoke: bool = False):
                     n_params = sum(int(v.size) for v in params.values())
                     n_leaves = len(params)
                     up_bits, down_bits = policy_bits_per_dim(pol, params), 32.0
+                    layout_resolved = _resolved_layout(pol)
                 else:
                     cfg_b = CompressionConfig(method=method, bucketed=True, **kw)
                     lay = bucket_layout(cfg_b, params)
                     n_params, n_leaves = lay.size, lay.n_leaves
                     up_bits, down_bits = _direction_bits(cfg_b, params, lay)
+                    layout_resolved = _resolved_layout(cfg_b)
                 floor_bytes = _round_bytes_floor(n_params, up_bits, down_bits)
                 rows.append({
                     "size": size_name,
@@ -252,6 +273,7 @@ def collect(smoke: bool = False):
                     "n_leaves": n_leaves,
                     "operator": label,
                     "path": path,
+                    "resolved_layout": layout_resolved,
                     "us_perleaf": cell.get("perleaf"),
                     "us_bucketed": cell.get("bucketed"),
                     "speedup": (cell["perleaf"] / cell["bucketed"]
@@ -264,7 +286,8 @@ def collect(smoke: bool = False):
                     "fraction_of_roofline_bucketed": _roofline_fraction(
                         floor_bytes, cell.get("bucketed")),
                 })
-    rows += collect_elastic(smoke)
+    rows += collect_elastic(smoke, faults=faults)
+    rows += collect_topology(smoke)
     return rows
 
 
@@ -278,7 +301,7 @@ ELASTIC_OPERATORS = [
 ]
 
 
-def collect_elastic(smoke: bool = False):
+def collect_elastic(smoke: bool = False, faults: bool = False):
     """q x operator rows: bucketed step time under partial participation.
 
     ``q=1.0`` runs participation=None — the exact pre-elastic code path, the
@@ -287,15 +310,24 @@ def collect_elastic(smoke: bool = False):
     (``repro.core.participation.expected_rate``): the uplink payload of a
     non-participant is never sent, so the expected per-step traffic shrinks
     linearly in q even though the SPMD buffers stay fixed-shape.
+
+    ``faults=True`` (the --faults flag) arms the wire checksum: every wire
+    buffer then carries the 8-byte tail — one PER CHUNK of the bucketed
+    schedule (``checksum_tail_bits_per_dim``) — and the effective bits
+    include it (a participant ships payload + tail; a non-participant ships
+    neither).
     """
-    from repro.core.participation import ParticipationSpec, expected_rate
+    from repro.core.participation import (ParticipationSpec, expected_rate,
+                                          parse_faults)
     from repro.core import bucketed_compressor
+    from repro.core.bucket import checksum_tail_bits_per_dim
 
     reps = 5 if smoke else 15
     key = jax.random.PRNGKey(1)
     size_name = "tiny" if smoke else "small"
     params = _params((SIZES_SMOKE if smoke else SIZES)[size_name])
     method = {"diana": "diana", "topk": "topk_ef"}
+    plan = parse_faults("checksum") if faults else None
     rows = []
     for label, kw in ELASTIC_OPERATORS:
         for q in ELASTIC_QS:
@@ -304,25 +336,82 @@ def collect_elastic(smoke: bool = False):
                                     participation=spec, **kw)
             cells = {}
             for path, setup in PATHS.items():
-                made = setup(params, cfg, key)
+                made = setup(params, cfg, key, faults=plan)
                 if made is not None:
                     cells[path] = made
             cell = _timeit_interleaved(cells, reps)
             lay = bucket_layout(cfg, params)
             up_bits = bucketed_compressor(cfg, lay).bits_per_dim()
+            tail = (checksum_tail_bits_per_dim(lay, cfg.chunk_bytes)
+                    if plan is not None else 0.0)
             rate = 1.0 if spec is None else expected_rate(spec)
             rows.append({
                 "size": size_name,
                 "n_params": lay.size,
                 "operator": f"elastic/{label}",
                 "participation_q": q,
+                "checksum": plan is not None,
+                "resolved_layout": _resolved_layout(cfg),
                 "us_reference": cell.get("reference"),
                 "us_shardmap": cell.get("shardmap"),
                 "uplink_bits_per_dim": round(up_bits, 4),
-                "effective_uplink_bits_per_dim": round(up_bits * rate, 4),
+                "checksum_tail_bits_per_dim": round(tail, 6),
+                "effective_uplink_bits_per_dim": round((up_bits + tail) * rate, 4),
                 "effective_uplink_bits_per_step": round(
-                    up_bits * rate * lay.size * N_WORKERS, 1),
+                    (up_bits + tail) * rate * lay.size * N_WORKERS, 1),
             })
+    return rows
+
+
+# topology grid (DESIGN.md §Topology): the chunked wire schedule and the
+# two-level hierarchical exchange are pure EXECUTION layouts of the same
+# round (bitwise-equal results), so these rows measure layout cost exactly
+# like the perleaf-vs-bucketed columns do.  (label, chunk_bytes, node_size)
+TOPOLOGY_GRID = [
+    ("flat", 0, 1),
+    ("flat+chunk", 16384, 1),
+    ("hier", 0, 2),
+    ("hier+chunk", 16384, 2),
+]
+
+
+def collect_topology(smoke: bool = False):
+    """``topology`` rows: diana bucketed at the small size across the
+    (topology, chunk_bytes, node_size) grid.  The hierarchical rows compress
+    only the inter-node exchange (n_eff = n/node_size payload rows), the
+    chunked rows overlap each chunk's collective with the previous chunk's
+    decode — the committed trajectory shows what each layout buys."""
+    reps = 5 if smoke else 15
+    key = jax.random.PRNGKey(2)
+    size_name = "tiny" if smoke else "small"
+    params = _params((SIZES_SMOKE if smoke else SIZES)[size_name])
+    rows = []
+    for label, cb, ns in TOPOLOGY_GRID:
+        cfg = CompressionConfig(
+            method="diana", bucketed=True, block_size=256, p=math.inf,
+            chunk_bytes=cb, topology="hierarchical" if ns > 1 else "flat",
+            node_size=ns)
+        cells = {}
+        for path, setup in PATHS.items():
+            made = setup(params, cfg, key, node_size=ns)
+            if made is not None:
+                cells[path] = made
+        cell = _timeit_interleaved(cells, reps)
+        lay = bucket_layout(cfg, params)
+        from repro.core.bucket import ChunkedSchedule
+
+        rows.append({
+            "size": size_name,
+            "n_params": lay.size,
+            "operator": f"topology/{label}",
+            "topology": cfg.topology,
+            "chunk_bytes": cb,
+            "n_chunks": ChunkedSchedule.for_layout(lay, cb).n_chunks,
+            "node_size": ns,
+            "resolved_layout": _resolved_layout(cfg),
+            "us_reference": cell.get("reference"),
+            "us_shardmap": cell.get("shardmap"),
+        })
     return rows
 
 
@@ -398,6 +487,13 @@ def run():
                            f"{r['effective_uplink_bits_per_dim']}",
             })
             continue
+        if r["operator"].startswith("topology/"):
+            out.append({
+                "name": f"step_time/{r['size']}/{r['operator']}",
+                "us_per_call": r["us_shardmap"] or r["us_reference"],
+                "derived": f"n_chunks={r['n_chunks']} node_size={r['node_size']}",
+            })
+            continue
         out.append({
             "name": f"step_time/{r['size']}/{r['operator']}/{r['path']}/bucketed",
             "us_per_call": r["us_bucketed"],
@@ -410,16 +506,27 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="fewer reps (CI) — same size x operator grid")
+    ap.add_argument("--faults", action="store_true",
+                    help="arm the wire checksum on the elastic grid: rows "
+                         "then time the per-chunk checksum+verify path and "
+                         "the effective bits include the 8-byte tail per "
+                         "wire buffer (one per chunk)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: the committed repo-root "
                          "file for full runs, a temp-dir scratch file for "
                          "--smoke so the trajectory artifact is never "
                          "clobbered or shadowed by a sibling)")
     args = ap.parse_args(argv)
-    rows = collect(smoke=args.smoke)
+    rows = collect(smoke=args.smoke, faults=args.faults)
     out = args.out or (OUT_PATH if not args.smoke else smoke_out_path(OUT_PATH))
     path = write_json(rows, out)
     for r in rows:
+        if r["operator"].startswith("topology/"):
+            rf = f"{r['us_reference']:10.0f}" if r["us_reference"] else "         -"
+            sm = f"{r['us_shardmap']:10.0f}" if r["us_shardmap"] else "         -"
+            print(f"{r['size']:7s} {r['operator']:14s} chunks={r['n_chunks']:<3} "
+                  f"nodes={r['node_size']:<2} reference{rf}us shardmap{sm}us")
+            continue
         if "participation_q" in r:
             rf = f"{r['us_reference']:10.0f}" if r["us_reference"] else "         -"
             sm = f"{r['us_shardmap']:10.0f}" if r["us_shardmap"] else "         -"

@@ -42,6 +42,7 @@ from .compressors.base import Compressor, Payload
 
 __all__ = [
     "BucketLayout",
+    "ChunkedSchedule",
     "GroupedBucketLayout",
     "BucketedCompressor",
     "bucketed_compressor",
@@ -52,6 +53,7 @@ __all__ = [
     "CHECKSUM_BYTES",
     "add_checksum",
     "verify_checksum",
+    "checksum_tail_bits_per_dim",
 ]
 
 
@@ -148,6 +150,104 @@ class BucketLayout:
             jax.lax.slice_in_dim(flat, off, off + ps)
             for off, ps in zip(self.offsets, self.padded_sizes)
         ]
+
+
+@dataclass(frozen=True)
+class ChunkedSchedule:
+    """A :class:`BucketLayout` split into consecutive whole-leaf chunks.
+
+    The chunked wire (repro.core.diana) compresses, gathers and decodes the
+    flat buffer one chunk at a time, issuing chunk *i+1*'s collective before
+    chunk *i*'s ``decode_sum`` so the gather overlaps the decode (async
+    collectives double-buffer the wire).  Chunk boundaries sit on LEAF
+    boundaries only:
+
+    * each leaf keeps its position in the monolithic key schedule, so the
+      per-chunk compress of leaf ``j`` with key ``keys[j]`` draws exactly the
+      monolithic bits — sum-of-chunks is bitwise the monolithic sum;
+    * segments stay ``align``-padded, so quantization blocks never straddle a
+      chunk boundary either.
+
+    ``bounds`` are the leaf indices at which chunks begin/end
+    (``bounds[0] == 0``, ``bounds[-1] == n_leaves``); the greedy packer
+    :meth:`for_layout` closes a chunk once it holds at least ``chunk_bytes``
+    of padded f32 payload, so chunk sizes need not divide the buffer.
+    """
+
+    layout: BucketLayout
+    bounds: Tuple[int, ...]
+
+    @classmethod
+    def for_layout(cls, layout: BucketLayout,
+                   chunk_bytes: int) -> "ChunkedSchedule":
+        """Greedy whole-leaf packing toward ``chunk_bytes`` per chunk
+        (buffer bytes = 4 * padded elements).  ``chunk_bytes <= 0`` or larger
+        than the buffer yields the single-chunk (monolithic) schedule."""
+        if chunk_bytes <= 0:
+            return cls(layout=layout, bounds=(0, layout.n_leaves))
+        bounds = [0]
+        acc = 0
+        for i, ps in enumerate(layout.padded_sizes):
+            if acc >= chunk_bytes and acc > 0:
+                bounds.append(i)
+                acc = 0
+            acc += 4 * ps
+        bounds.append(layout.n_leaves)
+        return cls(layout=layout, bounds=tuple(bounds))
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def chunk_layouts(self) -> Tuple[BucketLayout, ...]:
+        return _chunk_layouts(self)
+
+    @property
+    def chunk_offsets(self) -> Tuple[int, ...]:
+        """Element offset of each chunk in the monolithic flat buffer."""
+        return tuple(self.layout.offsets[b] if b < self.layout.n_leaves
+                     else self.layout.padded_size for b in self.bounds[:-1])
+
+    @property
+    def chunk_sizes(self) -> Tuple[int, ...]:
+        """Padded element count of each chunk."""
+        return tuple(l.padded_size for l in self.chunk_layouts)
+
+    def split(self, flat: jax.Array):
+        """Flat buffer -> the per-chunk buffer views (static slices)."""
+        return [
+            jax.lax.slice_in_dim(flat, off, off + sz)
+            for off, sz in zip(self.chunk_offsets, self.chunk_sizes)
+        ]
+
+    def chunk_keys(self, keys: jax.Array, c: int) -> jax.Array:
+        """Chunk ``c``'s slice of the MONOLITHIC per-leaf key schedule
+        (``jax.random.split(key, n_leaves)``) — the bitwise-equality
+        linchpin: chunking never re-splits keys."""
+        return keys[self.bounds[c]:self.bounds[c + 1]]
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_layouts(sched: ChunkedSchedule) -> Tuple[BucketLayout, ...]:
+    """Per-chunk sub-layouts with offsets rebased to the chunk's origin, so
+    every ``*_bucketed`` hook (and its index arithmetic — the sparse
+    operators embed layout offsets in their payloads) works per chunk
+    unchanged."""
+    lay = sched.layout
+    outs = []
+    for b0, b1 in zip(sched.bounds[:-1], sched.bounds[1:]):
+        base = lay.offsets[b0] if b0 < lay.n_leaves else lay.padded_size
+        outs.append(BucketLayout(
+            treedef=jax.tree_util.tree_structure([0] * (b1 - b0)),
+            shapes=lay.shapes[b0:b1],
+            dtypes=lay.dtypes[b0:b1],
+            sizes=lay.sizes[b0:b1],
+            padded_sizes=lay.padded_sizes[b0:b1],
+            offsets=tuple(o - base for o in lay.offsets[b0:b1]),
+            align=lay.align,
+        ))
+    return tuple(outs)
 
 
 @dataclass(frozen=True)
@@ -289,6 +389,17 @@ def verify_checksum(wire: jax.Array):
         tail.reshape(*wire.shape[:-1], 2, 4), jnp.uint32)
     ok = jnp.all(got == _checksum_words(flat), axis=-1)
     return flat, ok
+
+
+def checksum_tail_bits_per_dim(layout: BucketLayout, chunk_bytes: int = 0) -> float:
+    """Wire overhead per coordinate of the checksum tails when faults are
+    armed: ONE :data:`CHECKSUM_BYTES` tail rides EVERY wire buffer — one per
+    chunk of the :class:`ChunkedSchedule` (the monolithic wire is one chunk).
+    Honest bits/dim accounting must count it; the compressors' own
+    ``bits_per_dim`` never does (the tail belongs to the wire, not the
+    operator)."""
+    n_chunks = ChunkedSchedule.for_layout(layout, chunk_bytes).n_chunks
+    return CHECKSUM_BYTES * 8.0 * n_chunks / max(layout.size, 1)
 
 
 # ---------------------------------------------------------------------------

@@ -88,6 +88,21 @@ class CompressionConfig:
                  -step floor (DESIGN.md §Elasticity).  ``None`` or a trivial
                  spec keeps the round on the exact pre-elastic code path.
                  A frozen dataclass, so the config stays hashable.
+    chunk_bytes: target size (bytes of padded f32 buffer) of each chunk of
+                 the bucketed wire (:class:`~repro.core.bucket.ChunkedSchedule`)
+                 — chunk *i+1*'s collective is issued before chunk *i*'s
+                 decode so the gather overlaps the decode.  ``0`` (default)
+                 keeps the monolithic single-chunk wire.  Bitwise-equal
+                 results either way (DESIGN.md §Topology); bucketed only.
+    topology:    ``"flat"`` (default) — every worker exchanges compressed
+                 payloads directly; ``"hierarchical"`` — Bagua-style
+                 two-level rounds: an uncompressed intra-node mean over
+                 ``node_size``-worker groups, then the compressed DIANA
+                 exchange between node leaders, whose h-memories are kept per
+                 node so ``h == mean(h_i)`` holds exactly (DESIGN.md
+                 §Topology).  Bucketed only.
+    node_size:   workers per node for ``topology="hierarchical"`` (must
+                 divide the worker count).  ``1`` degenerates to flat.
     """
 
     method: str = "diana"
@@ -105,6 +120,9 @@ class CompressionConfig:
     down_k: Optional[int] = None
     down_bucketed: Optional[bool] = None
     participation: Optional[ParticipationSpec] = None
+    chunk_bytes: int = 0
+    topology: str = "flat"
+    node_size: int = 1
 
     def __post_init__(self):
         canonical_name(self.method)  # raises on unknown methods
@@ -118,6 +136,16 @@ class CompressionConfig:
             self.participation, ParticipationSpec
         ):
             raise TypeError("participation must be a ParticipationSpec")
+        if self.chunk_bytes < 0:
+            raise ValueError(f"chunk_bytes must be >= 0, got {self.chunk_bytes}")
+        if self.topology not in ("flat", "hierarchical"):
+            raise ValueError(
+                f"topology must be 'flat' or 'hierarchical', got {self.topology!r}")
+        if self.node_size < 1:
+            raise ValueError(f"node_size must be >= 1, got {self.node_size}")
+        if self.topology == "hierarchical" and not self.bucketed:
+            raise ValueError("topology='hierarchical' requires bucketed=True "
+                             "(the two-level round runs on the fused wire)")
 
     # ------------------------------------------------------------- factory
 
@@ -162,6 +190,11 @@ class CompressionConfig:
             # elasticity acts on the uplink round (and freezes h_down on
             # degraded steps at the caller), never on the downlink operator.
             participation=None,
+            # No collective on the downlink either: topology is an uplink
+            # concern.  chunk_bytes is inherited — the broadcast wire chunks
+            # the same way the uplink wire does.
+            topology="flat",
+            node_size=1,
         )
 
     @property

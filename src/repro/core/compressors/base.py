@@ -257,13 +257,32 @@ class Compressor:
     def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
         """Encode the whole padded flat buffer ``delta`` into ONE Payload.
 
-        Generic fallback: per-segment :meth:`compress` with the per-leaf key
-        schedule, every field concatenated along axis 0 (segment indices stay
-        segment-local; :meth:`decode_bucketed` splits them back).  Correct for
-        any operator, but per-segment work — fused overrides are where the
-        single-kernel-launch win comes from.
-        """
+        Derives the per-leaf key schedule (``split(key, n_leaves)``) and
+        delegates to :meth:`compress_bucketed_keys`; the chunked wire
+        (repro.core.bucket.ChunkedSchedule) instead splits the MONOLITHIC
+        schedule once and calls :meth:`compress_bucketed_keys` per chunk with
+        its key slice, so chunking never re-splits keys."""
         keys = jax.random.split(key, layout.n_leaves)
+        return self.compress_bucketed_keys(layout, delta, keys, key)
+
+    def compress_bucketed_keys(
+        self, layout, delta: jax.Array, keys: jax.Array,
+        fallback_key: Optional[jax.Array] = None,
+    ) -> Payload:
+        """Encode ``delta`` given the explicit per-leaf key schedule ``keys``
+        (one key per layout leaf, in leaf order).
+
+        Generic fallback: per-segment :meth:`compress` with ``keys[i]``, every
+        field concatenated along axis 0 (segment indices stay segment-local;
+        :meth:`decode_bucketed` splits them back).  Correct for any operator,
+        but per-segment work — fused overrides are where the
+        single-kernel-launch win comes from.  ``fallback_key`` is the single
+        whole-buffer key for overrides whose compiled kernels draw PRNG bits
+        in-kernel (distribution-equal paths that cannot honour a per-leaf
+        schedule); the chunked driver passes a per-chunk fold of the round
+        key there.
+        """
+        del fallback_key  # the generic path honours the per-leaf schedule
         pays = [
             self.compress(seg, k)
             for seg, k in zip(layout.split_padded(delta), keys)

@@ -71,8 +71,9 @@ class IdentityCompressor(Compressor):
 
     # ------------------------------------------------- bucketed (flat) path
 
-    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
-        del key
+    def compress_bucketed_keys(self, layout, delta: jax.Array,
+                               keys: jax.Array, fallback_key=None) -> Payload:
+        del keys, fallback_key  # deterministic cast/copy
         return Payload(values=self._values(delta))
 
     def decode_bucketed(self, layout, payload: Payload) -> jax.Array:

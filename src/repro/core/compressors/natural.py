@@ -126,7 +126,8 @@ class NaturalCompressor(Compressor):
 
     # ------------------------------------------------- bucketed (flat) path
 
-    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+    def compress_bucketed_keys(self, layout, delta: jax.Array,
+                               keys: jax.Array, fallback_key=None) -> Payload:
         """ONE vectorized encode over the whole buffer; per-segment bits
         drawn with the per-leaf key schedule so codes match the per-leaf path
         bitwise (alignment is 1: segments are unpadded and contiguous)."""
@@ -135,10 +136,11 @@ class NaturalCompressor(Compressor):
             from repro.kernels import ops as _kops
 
             if not _kops.default_interpret():
-                # One whole-buffer in-kernel PRNG stream (distribution-equal,
-                # the documented compiled-TPU exception).
-                return Payload(packed=_kops.nat_pack_prng_op(x, key))
-        keys = jax.random.split(key, layout.n_leaves)
+                # One whole-buffer in-kernel PRNG stream from fallback_key
+                # (distribution-equal, the documented compiled-TPU exception).
+                if fallback_key is None:
+                    fallback_key = keys[0]
+                return Payload(packed=_kops.nat_pack_prng_op(x, fallback_key))
         bits = jnp.concatenate([
             self._draw_bits(k, (s,))
             for k, s in zip(keys, layout.padded_sizes)

@@ -139,8 +139,9 @@ class RandKCompressor(Compressor):
 
     # ------------------------------------------------- bucketed (flat) path
 
-    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
-        keys = jax.random.split(key, layout.n_leaves)
+    def compress_bucketed_keys(self, layout, delta: jax.Array,
+                               keys: jax.Array, fallback_key=None) -> Payload:
+        del fallback_key  # subset draws honour the per-leaf schedule
         parts = []
         for k, off, d in zip(keys, layout.offsets, layout.sizes):
             idx = _uniform_subset(k, d, self._k(d))

@@ -149,43 +149,72 @@ class TernaryCompressor(Compressor):
         identical to the per-leaf path's (bitwise wire-format equality)."""
         return self.block_size
 
-    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
-        """ONE fused quantize+pack over the whole model's block matrix.
+    def _batched_bits(self, keys: jax.Array, seg_rows) -> list:
+        """Per-segment uint32 Bernoulli bit matrices, drawn in row-count
+        batches: segments with the same block-row count ``m`` are vmapped
+        over their stacked keys in ONE ``jax.random.bits`` call.  Threefry is
+        counter-mode, so the batched draw is bit-for-bit the per-key calls —
+        it just amortises the per-call hash setup, which dominates the
+        bucketed compress at small model sizes (the same per-leaf-PRNG
+        overhead PR 6 removed from rand-k's subset draws)."""
+        out = [None] * len(seg_rows)
+        groups: dict = {}
+        for i, m in enumerate(seg_rows):
+            groups.setdefault(m, []).append(i)
+        for m, idxs in groups.items():
+            if len(idxs) == 1:
+                i = idxs[0]
+                out[i] = jax.random.bits(
+                    keys[i], (m, self.block_size), dtype=jnp.uint32)
+                continue
+            stacked = jnp.stack([keys[i] for i in idxs])
+            draws = jax.vmap(
+                lambda k: jax.random.bits(k, (m, self.block_size),
+                                          dtype=jnp.uint32)
+            )(stacked)
+            for j, i in enumerate(idxs):
+                out[i] = draws[j]
+        return out
+
+    def compress_bucketed_keys(self, layout, delta: jax.Array,
+                               keys: jax.Array, fallback_key=None) -> Payload:
+        """ONE fused quantize+pack over the (chunk of the) block matrix.
 
         The per-leaf PRNG schedule is preserved exactly: segment ``i`` draws
-        its bits/uniforms from ``split(key, n_leaves)[i]`` over its own padded
-        block rows — the same draws the per-leaf path makes — and the single
-        kernel launch (or vectorized jnp quantization) consumes the
-        concatenation.  On compiled TPU the bits are instead drawn in-kernel
-        (one PRNG stream for the whole buffer): distribution-equal, bitwise
-        only within that mode.
+        its bits/uniforms from ``keys[i]`` over its own padded block rows —
+        the same draws the per-leaf path makes — and the single kernel launch
+        (or vectorized jnp quantization) consumes the concatenation.  On
+        compiled TPU the bits are instead drawn in-kernel from
+        ``fallback_key`` (one PRNG stream for the whole buffer):
+        distribution-equal, bitwise only within that mode.
         """
         blocks = delta.astype(jnp.float32).reshape(-1, self.block_size)
-        keys = jax.random.split(key, layout.n_leaves)
         seg_rows = [ps // self.block_size for ps in layout.padded_sizes]
         if self.use_kernel:
             from repro.kernels import ops as _kops
 
             if _kops.default_interpret():
-                bits = jnp.concatenate([
-                    jax.random.bits(k, (m, self.block_size), dtype=jnp.uint32)
-                    for k, m in zip(keys, seg_rows)
-                ])
+                bits = jnp.concatenate(self._batched_bits(keys, seg_rows))
                 packed, scales = _kops.quantize_pack_op(blocks, bits, p=self.p)
             else:
-                packed, scales = _kops.quantize_pack_prng_op(blocks, key, p=self.p)
+                if fallback_key is None:
+                    fallback_key = keys[0]
+                packed, scales = _kops.quantize_pack_prng_op(
+                    blocks, fallback_key, p=self.p)
             return Payload(packed=packed, scales=scales[:, 0])
         # jnp path: quantize per segment and concatenate only the 2-bit wire
         # format (16x smaller than the f32 intermediates) — XLA then fuses
         # each segment's quantize+pack like the per-leaf path does, instead
         # of materialising whole-model f32 buffers.  Per-block independence
-        # makes this bitwise-identical to one fused call.
+        # makes this bitwise-identical to one fused call.  Only the PRNG
+        # draws are batched (``_batched_bits``): a fully fused whole-buffer
+        # quantize measured SLOWER than the per-segment fusions.
+        seg_bits = self._batched_bits(keys, seg_rows)
         packed_parts, scale_parts = [], []
         row = 0
-        for k, m in zip(keys, seg_rows):
+        for bits, m in zip(seg_bits, seg_rows):
             seg = jax.lax.slice_in_dim(blocks, row, row + m)
             row += m
-            bits = jax.random.bits(k, (m, self.block_size), dtype=jnp.uint32)
             q = quantize_blocks_from_uniform(seg, uniform_from_bits(bits), p=self.p)
             packed_parts.append(pack2bit(q.signs))
             scale_parts.append(q.scales)

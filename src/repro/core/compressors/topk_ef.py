@@ -155,11 +155,12 @@ class TopKEFCompressor(Compressor):
 
     # ------------------------------------------------- bucketed (flat) path
 
-    def compress_bucketed(self, layout, delta: jax.Array, key: jax.Array) -> Payload:
+    def compress_bucketed_keys(self, layout, delta: jax.Array,
+                               keys: jax.Array, fallback_key=None) -> Payload:
         """Per-segment top-k (deterministic, cheap local selections) fused
         into ONE global-coordinate payload; the error-feedback memory hooks
         are elementwise and run on the flat buffer unchanged."""
-        del key
+        del keys, fallback_key  # deterministic selection
         x = delta.astype(jnp.float32)
         parts = []
         for off, d in zip(layout.offsets, layout.sizes):

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from .bucket import (
     BucketLayout,
+    ChunkedSchedule,
     add_checksum,
     bucketed_compressor,
     fuse_payload,
@@ -57,6 +58,7 @@ from .vr import VRState, control_variate, init_vr, reference_coins, refresh, vr_
 
 __all__ = [
     "DianaState",
+    "CHUNK_FOLD",
     "DOWN_FOLD",
     "GROUP_FOLD",
     "init_state",
@@ -83,6 +85,17 @@ DOWN_FOLD = 0x444E  # 'DN'
 # index.  UNIFORM policies never fold this: the single-rule path IS the
 # pre-policy flat path, draw for draw (DESIGN.md §Policy).
 GROUP_FOLD = 0x4750  # 'GP'
+
+# Chunked wire (repro.core.bucket.ChunkedSchedule): chunk ``c`` of a round
+# never re-splits keys — it compresses with the SLICE of the monolithic
+# per-leaf schedule ``split(key, n_leaves)[bounds[c]:bounds[c+1]]``, which is
+# what keeps chunked == monolithic bitwise.  CHUNK_FOLD exists only for the
+# compiled-TPU in-kernel-PRNG encodes, which draw one stream per kernel
+# launch and cannot honour a per-leaf schedule: chunk ``c`` there draws from
+# ``fold_in(key, CHUNK_FOLD + c)`` — distribution-equal, bitwise only within
+# a fixed chunking, the same documented exception as that mode's
+# bucketed-vs-perleaf story (DESIGN.md §Topology: the PRNG chunk-fold rule).
+CHUNK_FOLD = 0x434B  # 'CK'
 
 
 def _split_spec(spec):
@@ -295,20 +308,28 @@ def init_state(params, cfg, n_workers: int) -> DianaState:
 # Distributed aggregation (inside shard_map over worker axes)
 # ---------------------------------------------------------------------------
 
-def _gather_field(a, axis_names):
+def _gather_field(a, axis_names, groups=None):
     """All-gather ONE payload field over the worker axes.
 
     The gathered buffer is explicitly re-constrained to stay sharded over
     'model' on the post-worker dim — ``all_gather`` output sharding does not
     propagate the auto axes by itself and would otherwise replicate the
-    payload n times per device.
+    payload n times per device.  ``groups`` (hierarchical topology) restricts
+    the gather to ``axis_index_groups`` subsets of ONE worker axis — e.g. the
+    inter-node leader exchange, whose rows arrive in node order.
     """
     from repro.models.sharding import shard
 
-    out = (
-        jax.lax.all_gather(a, axis_names, tiled=False)
-        if axis_names else a[None]
-    )
+    if groups is not None:
+        assert len(axis_names) == 1, (
+            "grouped gathers (hierarchical topology) need ONE worker axis")
+        out = jax.lax.all_gather(a, axis_names[0], tiled=False,
+                                 axis_index_groups=groups)
+    else:
+        out = (
+            jax.lax.all_gather(a, axis_names, tiled=False)
+            if axis_names else a[None]
+        )
     return shard(out, None, "model", *(None,) * (out.ndim - 2))
 
 
@@ -450,7 +471,7 @@ def _aggregate_local(grads_local, h_worker, h_server, key, cfg, axis_names,
     return ghat, new_hw, new_h_server
 
 
-def _gather_fused(payload: Payload, axis_names):
+def _gather_fused(payload: Payload, axis_names, groups=None):
     """All-gather ONE fused uint8 buffer instead of one collective per field.
 
     Every populated Payload field is byte-cast into a single contiguous
@@ -466,12 +487,103 @@ def _gather_fused(payload: Payload, axis_names):
         # (e.g. natural's whole-model int16 codes)
         i = populated[0]
         fields = [None] * len(Payload._fields)
-        fields[i] = _gather_field(payload[i], axis_names)
+        fields[i] = _gather_field(payload[i], axis_names, groups)
         return Payload(*fields)
 
     buf = fuse_payload(payload)
     recipe = payload_recipe(payload)
-    return unfuse_payload(_gather_field(buf, axis_names), recipe)
+    return unfuse_payload(_gather_field(buf, axis_names, groups), recipe)
+
+
+# ---------------------------------------------------------------------------
+# Two-level (hierarchical) topology + the chunked wire schedule
+# ---------------------------------------------------------------------------
+
+def _node_groups(n_workers: int, node_size: int):
+    """Intra-node ``axis_index_groups``: consecutive ``node_size`` workers
+    form one node (worker w lives on node ``w // node_size``)."""
+    return [[b * node_size + r for r in range(node_size)]
+            for b in range(n_workers // node_size)]
+
+
+def _internode_groups(n_workers: int, node_size: int):
+    """Inter-node ``axis_index_groups``: one worker of intra-node rank ``r``
+    per node, in ascending node order — so every worker's gathered leader
+    payloads arrive stacked node 0, 1, ... exactly like the reference
+    mirror's node rows.  (Payloads are node-replicated — same delta, same
+    node-folded key — so any rank's copy is THE node payload.)"""
+    return [[b * node_size + r for b in range(n_workers // node_size)]
+            for r in range(node_size)]
+
+
+def _ordered_node_sum(rows, s: int):
+    """The ascending ordered f32 sum over one node's ``s`` worker rows, then
+    ``/ s`` — an EXPLICIT recurrence (never psum/pmean, whose reduction order
+    the backend owns) shared bit for bit with the reference mirror's
+    node pooling."""
+    acc = rows[0]
+    for i in range(1, s):
+        acc = acc + rows[i]
+    return acc / s
+
+
+def _intranode_mean(g_flat, axis_names, n_workers: int, node_size: int):
+    """Level 1 of the hierarchical round: the UNcompressed mean of the flat
+    gradient buffer over this worker's node (cheap ICI bandwidth), leaving
+    every worker holding its node's pooled gradient — the node gradient
+    DIANA then compresses once per node instead of once per worker."""
+    rows = jax.lax.all_gather(
+        g_flat, axis_names[0], tiled=False,
+        axis_index_groups=_node_groups(n_workers, node_size))
+    return _ordered_node_sum([rows[i] for i in range(node_size)], node_size)
+
+
+def _node_pool_tree(grads_per_worker, node_size: int):
+    """Reference mirror of :func:`_intranode_mean`: pool stacked per-worker
+    grads ``(n, ...)`` to per-node means ``(n_nodes, ...)`` with the same
+    cast-to-f32 + ascending ordered sum + ``/ s`` recurrence per leaf."""
+
+    def pool(x):
+        x = x.astype(jnp.float32)
+        xr = x.reshape(-1, node_size, *x.shape[1:])
+        return _ordered_node_sum([xr[:, i] for i in range(node_size)],
+                                 node_size)
+
+    return jax.tree_util.tree_map(pool, grads_per_worker)
+
+
+def _hier_node_size(cfg) -> int:
+    """The active node size: >1 exactly when the two-level round runs."""
+    return cfg.node_size if cfg.topology == "hierarchical" else 1
+
+
+def _chunk_payloads(cfg, sched: ChunkedSchedule, delta, key):
+    """Compress one worker's delta buffer chunk by chunk.
+
+    THE chunk PRNG rule: the monolithic per-leaf schedule is split ONCE and
+    sliced per chunk (:meth:`ChunkedSchedule.chunk_keys`), so every leaf
+    draws exactly its monolithic bits and sum-of-chunks == monolithic
+    bitwise.  ``fold_in(key, CHUNK_FOLD + c)`` feeds only the compiled-TPU
+    in-kernel-PRNG encodes (distribution-equal mode — see CHUNK_FOLD).
+    """
+    base = cfg.make()
+    keys = jax.random.split(key, sched.layout.n_leaves)
+    return [
+        base.compress_bucketed_keys(
+            cl, dseg, sched.chunk_keys(keys, c),
+            jax.random.fold_in(key, CHUNK_FOLD + c))
+        for c, (cl, dseg) in enumerate(
+            zip(sched.chunk_layouts, sched.split(delta)))
+    ]
+
+
+def _chunk_decode_own(cfg, sched: ChunkedSchedule, pays):
+    """This worker's own dhat over the whole buffer: per-chunk decodes
+    concatenated (per-coordinate, so bitwise the monolithic decode)."""
+    return jnp.concatenate([
+        bucketed_compressor(cfg, cl).decode(pay, cl.padded_size)
+        for cl, pay in zip(sched.chunk_layouts, pays)
+    ])
 
 
 def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names,
@@ -493,29 +605,59 @@ def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names,
     scheduled faults are injected, and the gathered wires verify on every
     receiver — invalid payloads are excluded from the sum exactly like
     non-participants, and the sender's ``h_i`` freezes (the verdict is
-    replicated, so the sender knows its payload was discarded).
+    replicated, so the sender knows its payload was discarded).  Under the
+    CHUNKED schedule each chunk is its own checksummed wire; a worker is
+    excluded whole (valid = AND over its chunk verdicts) so the invariant
+    ``h == mean h_i`` never sees a half-applied payload.
+
+    With ``cfg.topology == "hierarchical"`` the round is the Bagua-style
+    two-level exchange: the flat gradient buffer first averages UNcompressed
+    over this worker's node (:func:`_intranode_mean` — ordered recurrence,
+    intra-node ``axis_index_groups``), then the compressed DIANA round runs
+    BETWEEN node leaders (``n_eff = n_nodes`` payloads via the inter-node
+    groups) with the h-memory kept per node (every worker of a node stores
+    the identical node row, so the invariant ``h == mean(h_nodes)`` holds
+    exactly).  ``key`` must then be folded with the NODE index, not the
+    worker index — aggregate_shardmap documents the caller contract.
     """
     layout = bucket_layout(cfg, grads_local)
     comp = bucketed_compressor(cfg, layout)
     dp = layout.padded_size
 
     g_flat = layout.flatten(grads_local)                 # (Dp,) f32
+    node_size = _hier_node_size(cfg)
+    n_eff, groups = n_workers, None
+    if node_size > 1:
+        assert part is None and faults is None, (
+            "hierarchical topology composes with neither participation nor "
+            "fault injection — aggregate_shardmap gates this")
+        g_flat = _intranode_mean(g_flat, axis_names, n_workers, node_size)
+        n_eff = n_workers // node_size
+        groups = _internode_groups(n_workers, node_size)
+
     h_local = h_worker[0].astype(jnp.float32)            # (Dp,)
     if part is not None:
         h_local = jnp.where(part.reinit_own, jnp.zeros_like(h_local), h_local)
     delta = comp.compress_input(g_flat, h_local)
 
+    sched = ChunkedSchedule.for_layout(layout, cfg.chunk_bytes)
+    if sched.n_chunks > 1:
+        return _aggregate_bucketed_chunked(
+            layout, comp, sched, delta, h_local, h_server, key, cfg,
+            axis_names, n_eff, groups, n_workers,
+            part=part, faults=faults, step=step)
+
     payload = comp.compress(delta, key)                  # ONE Payload
     dhat_own = comp.decode(payload, dp)
 
     if part is None and faults is None:
-        gathered = _gather_fused(payload, axis_names)    # ONE collective
+        gathered = _gather_fused(payload, axis_names, groups)  # ONE collective
         # Fused server tail: decode_sum + mean + direction + memory update in
         # one hook — ONE kernel launch for kernel-backed operators (the
         # epilogue runs on the accumulator tile), the bitwise-identical hook
         # composition otherwise.
         ghat_flat, new_hs_f = comp.decode_sum_apply(
-            gathered, n_workers, dp, h_server.astype(jnp.float32)
+            gathered, n_eff, dp, h_server.astype(jnp.float32)
         )
         new_hw = comp.next_memory(h_local, dhat_own, delta).astype(cfg.h_dtype)[None]
         new_hs = new_hs_f.astype(cfg.h_dtype)
@@ -539,6 +681,110 @@ def _aggregate_bucketed(grads_local, h_worker, h_server, key, cfg, axis_names,
     total = comp.decode_sum(gathered.mask_workers(m_eff), n_workers, dp)
     ghat_flat, new_hs_f = _masked_server_tail(
         comp, h_server.astype(jnp.float32), total, n_workers, part, m_eff)
+    gate = part.m_own & part.ok
+    if valid is not None:
+        gate = gate & jnp.any(valid & (jnp.arange(n_workers) == part.widx))
+    new_h_local = jnp.where(gate, comp.next_memory(h_local, dhat_own, delta),
+                            h_local)
+    return (layout.unflatten(ghat_flat, cast=False),
+            new_h_local.astype(cfg.h_dtype)[None],
+            new_hs_f.astype(cfg.h_dtype))
+
+
+def _chunk_wire_meta(bufs):
+    """Per-chunk fused-wire geometry: each chunk's byte offset into the
+    round's concatenated payload body, and the body total — the window
+    :func:`repro.core.participation.apply_faults` maps corrupt events
+    through."""
+    sizes = [int(b.size) for b in bufs]
+    offs, acc = [], 0
+    for s in sizes:
+        offs.append(acc)
+        acc += s
+    return offs, acc
+
+
+def _aggregate_bucketed_chunked(layout, comp, sched, delta, h_local, h_server,
+                                key, cfg, axis_names, n_eff, groups, n_workers,
+                                part=None, faults=None, step=None):
+    """The chunked (double-buffered) wire of :func:`_aggregate_bucketed`.
+
+    The fused buffer is split into whole-leaf chunks
+    (:class:`~repro.core.bucket.ChunkedSchedule`) and the round is
+    software-pipelined: chunk ``c+1``'s all-gather is ISSUED before chunk
+    ``c``'s ``decode_sum(+apply)``, so with async collectives the transfer of
+    one chunk overlaps the decode of the previous one (the jaxpr-level
+    ordering ``tests/test_bucket.py`` proves structurally).  Per-chunk
+    results concatenate to bitwise the monolithic round: chunks are
+    whole-leaf, keys are slices of the monolithic schedule, and every
+    decode/apply recurrence is per-coordinate.  Worker-side memory updates
+    stay monolithic — only the wire is chunked.
+    """
+    cls_ = sched.chunk_layouts
+    comps = [bucketed_compressor(cfg, cl) for cl in cls_]
+    pays = _chunk_payloads(cfg, sched, delta, key)
+    dhat_own = _chunk_decode_own(cfg, sched, pays)
+    h_s = h_server.astype(jnp.float32)
+    hs_chunks = sched.split(h_s)
+    C = sched.n_chunks
+
+    if part is None and faults is None:
+        # Double-buffered pipeline: gather c+1 in flight while c decodes.
+        gathered = [None] * C
+        gathered[0] = _gather_fused(pays[0], axis_names, groups)
+        ghat_parts, hs_parts = [], []
+        for c in range(C):
+            if c + 1 < C:
+                gathered[c + 1] = _gather_fused(pays[c + 1], axis_names, groups)
+            g_c, h_c = comps[c].decode_sum_apply(
+                gathered[c], n_eff, cls_[c].padded_size, hs_chunks[c])
+            ghat_parts.append(g_c)
+            hs_parts.append(h_c)
+        ghat_flat = jnp.concatenate(ghat_parts)
+        new_hs_f = jnp.concatenate(hs_parts)
+        new_hw = comp.next_memory(h_local, dhat_own, delta).astype(cfg.h_dtype)[None]
+        return (layout.unflatten(ghat_flat, cast=False), new_hw,
+                new_hs_f.astype(cfg.h_dtype))
+
+    valid = None
+    if faults is not None:
+        # Per-chunk wires, each with its own checksum tail; corrupt events
+        # address the concatenated body (so they land in exactly one chunk),
+        # drop/delay break every tail.  All gathers are issued before any
+        # verify/decode — the collectives still overlap the decode work.
+        bufs = [fuse_payload(p) for p in pays]
+        offs, body_total = _chunk_wire_meta(bufs)
+        wires = [
+            apply_faults(add_checksum(bufs[c]), faults, step, part.widx,
+                         byte_offset=offs[c], body_total=body_total)
+            for c in range(C)
+        ]
+        gw = [_gather_field(w, axis_names) for w in wires]
+        gathereds, valids = [], []
+        for c in range(C):
+            flat, v_c = verify_checksum(gw[c])
+            valids.append(v_c)
+            gathereds.append(unfuse_payload(flat.reshape(-1, *bufs[c].shape),
+                                            payload_recipe(pays[c])))
+        # Whole-worker exclusion: ANY corrupted chunk discards the worker's
+        # round (a half-applied payload would break h == mean h_i).
+        valid = valids[0]
+        for v_c in valids[1:]:
+            valid = valid & v_c
+    else:
+        gathereds = [None] * C
+        gathereds[0] = _gather_fused(pays[0], axis_names, groups)
+        for c in range(1, C):
+            gathereds[c] = _gather_fused(pays[c], axis_names, groups)
+
+    m_eff = part.mask if valid is None else part.mask & valid
+    total = jnp.concatenate([
+        comps[c].decode_sum(gathereds[c].mask_workers(m_eff), n_workers,
+                            cls_[c].padded_size)
+        for c in range(C)
+    ])
+    ghat_flat, new_hs_f = _masked_server_tail(
+        comp, h_s, total, n_workers, part, m_eff)
     gate = part.m_own & part.ok
     if valid is not None:
         gate = gate & jnp.any(valid & (jnp.arange(n_workers) == part.widx))
@@ -592,8 +838,18 @@ def downlink_round(ghat, h_down, down_key: jax.Array, cfg: CompressionConfig,
         g = layout.flatten(ghat)
         h = h_down.astype(jnp.float32)
         delta = comp.compress_input(g, h)
-        pay = wire_roundtrip(comp.compress(delta, down_key))
-        dhat = comp.decode(pay, layout.padded_size)
+        sched = ChunkedSchedule.for_layout(layout, dcfg.chunk_bytes)
+        if sched.n_chunks > 1:
+            # Chunked broadcast wire: each chunk rides its own fused uint8
+            # wire object (the same schedule as the uplink), decodes
+            # per-coordinate and concatenates — bitwise the monolithic
+            # broadcast.
+            pays = [wire_roundtrip(p)
+                    for p in _chunk_payloads(dcfg, sched, delta, down_key)]
+            dhat = _chunk_decode_own(dcfg, sched, pays)
+        else:
+            pay = wire_roundtrip(comp.compress(delta, down_key))
+            dhat = comp.decode(pay, layout.padded_size)
         ghat_hat = layout.unflatten(comp.server_direction(h, dhat), cast=True)
         new_h = comp.next_memory(h, dhat, delta).astype(h_dtype)
         return ghat_hat, new_h
@@ -747,6 +1003,25 @@ def aggregate_shardmap(
         assert policy is None and cfg.bucketed, (
             "fault injection rides the bucketed fused wire buffer — use a "
             "flat cfg with bucketed=True")
+    if policy is not None and policy.topology == "hierarchical":
+        raise NotImplementedError(
+            "hierarchical topology currently runs only on flat (uniform) "
+            "bucketed configs — grouped policies keep topology='flat'")
+    if cfg is not None and _hier_node_size(cfg) > 1:
+        # Two-level rounds compose with neither elasticity nor VR (the node
+        # mean is an uncompressed barrier over healthy in-node workers), and
+        # the group partition is a single worker axis by construction.
+        # Callers must fold ``key`` with the NODE index (widx // node_size),
+        # not the worker index — the inter-node exchange is one DIANA round
+        # over node leaders and the reference scans over nodes.
+        assert spec is None and faults is None and state.vr is None, (
+            "topology='hierarchical' composes with neither participation/"
+            "faults nor VR")
+        assert len(axis_names) == 1, (
+            "topology='hierarchical' needs a single worker mesh axis (the "
+            "node groups are index windows on one axis)")
+        assert n_workers % cfg.node_size == 0, (
+            f"node_size={cfg.node_size} must divide n_workers={n_workers}")
 
     grads_in = grads_local
     new_vr = state.vr
@@ -1101,6 +1376,22 @@ def reference_step(
         assert policy is None and cfg.bucketed, (
             "fault injection rides the bucketed fused wire buffer — use a "
             "flat cfg with bucketed=True")
+    if policy is not None and policy.topology == "hierarchical":
+        raise NotImplementedError(
+            "hierarchical topology currently runs only on flat (uniform) "
+            "bucketed configs — grouped policies keep topology='flat'")
+    if cfg is not None and _hier_node_size(cfg) > 1:
+        # Mirror of the aggregate_shardmap gate: two-level rounds compose
+        # with neither elasticity nor VR, and worker count must tile into
+        # whole nodes.  The scan inside _reference_agg_bucketed then runs
+        # over nodes with fold_in(key, node) — the node key the distributed
+        # callers fold.
+        assert spec is None and faults is None and state.vr is None, (
+            "topology='hierarchical' composes with neither participation/"
+            "faults nor VR")
+        nw = jax.tree_util.tree_leaves(grads_per_worker)[0].shape[0]
+        assert nw % cfg.node_size == 0, (
+            f"node_size={cfg.node_size} must divide n_workers={nw}")
 
     new_vr = state.vr
     if state.vr is not None:
@@ -1308,7 +1599,27 @@ def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
     per-leaf reference (same compile-context sensitivity as the FMA
     contraction note in kernels/sparse.py).  Bitwise-equal to the per-leaf
     reference (same draws, same recurrences) and to the distributed bucketed
-    path."""
+    path.
+
+    Hierarchical topology mirrors the two-level distributed round: grads
+    pool to node means first (:func:`_node_pool_tree` — the identical
+    ordered recurrence the shardmap path uses), the scan then runs over
+    NODES with the node-leader h rows, and the returned worker memory
+    re-duplicates each node row over its workers so ``h == mean(h_i)``
+    holds over workers and nodes alike.  The chunked schedule mirrors the
+    chunked wire: the scan stacks a tuple of per-chunk payloads (same
+    monolithic key slices, see CHUNK_FOLD note), each decode_sum(+apply)
+    runs per chunk against the matching ``h_server`` slice, and the
+    results concatenate — bitwise the monolithic round."""
+    node_size = _hier_node_size(cfg)
+    if node_size > 1:
+        assert part is None and faults is None, (
+            "hierarchical topology composes with neither participation nor "
+            "fault injection (reference_step gates this)")
+        grads_per_worker = _node_pool_tree(grads_per_worker, node_size)
+        # Rows within a node are identical by construction (see the
+        # re-duplication below), so the leader rows ARE the node memories.
+        h_worker = h_worker[::node_size]
     layout = bucket_layout(cfg, jax.tree_util.tree_map(
         lambda g: g[0], grads_per_worker
     ))
@@ -1318,12 +1629,30 @@ def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
     if part is not None:
         h_worker = _reinit_zero(part.reinit, h_worker)
 
+    sched = ChunkedSchedule.for_layout(layout, cfg.chunk_bytes)
+    chunked = sched.n_chunks > 1
+    cls_ = sched.chunk_layouts
+    comps = [bucketed_compressor(cfg, cl) for cl in cls_] if chunked else []
+    base = cfg.make()
+
     def worker_round(_, xs):
         w, g_row, h_row = xs
         flat_g = layout.flatten(g_row)
         delta = comp.compress_input(flat_g, h_row)
-        payload = comp.compress(delta, _worker_key(key, w, gfold))
-        dhat_w = comp.decode(payload, dp)
+        wkey = _worker_key(key, w, gfold)
+        if chunked:
+            keys = jax.random.split(wkey, layout.n_leaves)
+            payload = tuple(
+                base.compress_bucketed_keys(
+                    cl, dseg, sched.chunk_keys(keys, c),
+                    jax.random.fold_in(wkey, CHUNK_FOLD + c))
+                for c, (cl, dseg) in enumerate(zip(cls_, sched.split(delta))))
+            dhat_w = jnp.concatenate([
+                comps[c].decode(payload[c], cls_[c].padded_size)
+                for c in range(sched.n_chunks)])
+        else:
+            payload = comp.compress(delta, wkey)
+            dhat_w = comp.decode(payload, dp)
         return None, (payload, comp.next_memory(h_row, dhat_w, delta))
 
     _, (stacked, new_h) = jax.lax.scan(
@@ -1331,30 +1660,61 @@ def _reference_agg_bucketed(grads_per_worker, h_worker, h_server, key, cfg,
         (jnp.arange(n), grads_per_worker, h_worker),
     )
     if part is None and faults is None:
-        ghat_flat, new_hs = comp.decode_sum_apply(stacked, n, dp, h_server)
+        if chunked:
+            hs_chunks = sched.split(h_server)
+            served = [
+                comps[c].decode_sum_apply(stacked[c], n,
+                                          cls_[c].padded_size, hs_chunks[c])
+                for c in range(sched.n_chunks)
+            ]
+            ghat_flat = jnp.concatenate([g for g, _ in served])
+            new_hs = jnp.concatenate([h for _, h in served])
+        else:
+            ghat_flat, new_hs = comp.decode_sum_apply(stacked, n, dp, h_server)
         # f32, like the per-leaf ref
         ghat = layout.unflatten(ghat_flat, cast=False)
+        if node_size > 1:
+            # Every worker of a node stores the identical node memory row.
+            new_h = jnp.repeat(new_h, node_size, axis=0)
         return ghat, new_h, new_hs
 
+    chunks = list(stacked) if chunked else [stacked]
     valid = None
     if faults is not None:
         # The wire mirror of the distributed fault path: fuse each worker's
-        # own payload, checksum it, inject that worker's scheduled faults,
-        # then verify the stack exactly as every receiver does post-gather.
-        buf0 = fuse_payload(stacked.select(0))
-        wires = [
-            apply_faults(add_checksum(fuse_payload(stacked.select(w))),
-                         faults, step, w)
-            for w in range(n)
-        ]
-        flat, valid = verify_checksum(jnp.stack(wires))
-        gathered = unfuse_payload(flat.reshape(n, *buf0.shape),
-                                  payload_recipe(stacked.select(0)))
+        # own payload PER CHUNK wire, checksum each, inject that worker's
+        # scheduled faults through the chunk's byte window, then verify each
+        # stack exactly as the receivers do post-gather.  A worker is
+        # excluded whole when ANY of its chunk wires fails.
+        bufs = [fuse_payload(ch.select(0)) for ch in chunks]
+        offs, body_total = _chunk_wire_meta(bufs)
+        gathered_chunks, valids = [], []
+        for c, ch in enumerate(chunks):
+            wires = [
+                apply_faults(add_checksum(fuse_payload(ch.select(w))),
+                             faults, step, w,
+                             byte_offset=offs[c],
+                             body_total=body_total if chunked else None)
+                for w in range(n)
+            ]
+            flat, v_c = verify_checksum(jnp.stack(wires))
+            valids.append(v_c)
+            gathered_chunks.append(unfuse_payload(
+                flat.reshape(n, *bufs[c].shape), payload_recipe(ch.select(0))))
+        valid = valids[0]
+        for v_c in valids[1:]:
+            valid = valid & v_c
     else:
-        gathered = stacked
+        gathered_chunks = chunks
 
     m_eff = part.mask if valid is None else part.mask & valid
-    total = comp.decode_sum(gathered.mask_workers(m_eff), n, dp)
+    if chunked:
+        total = jnp.concatenate([
+            comps[c].decode_sum(gathered_chunks[c].mask_workers(m_eff), n,
+                                cls_[c].padded_size)
+            for c in range(sched.n_chunks)])
+    else:
+        total = comp.decode_sum(gathered_chunks[0].mask_workers(m_eff), n, dp)
     ghat_flat, new_hs_f = _masked_server_tail(
         comp, h_server.astype(jnp.float32), total, n, part, m_eff)
     new_h = _where_rows(_participant_gate(part, valid), new_h, h_worker)

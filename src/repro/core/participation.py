@@ -341,19 +341,32 @@ def parse_faults(text: Optional[str]) -> Optional[FaultPlan]:
     return FaultPlan(events=tuple(events))
 
 
-def apply_faults(wire: jax.Array, plan: FaultPlan, step, widx) -> jax.Array:
+def apply_faults(wire: jax.Array, plan: FaultPlan, step, widx,
+                 byte_offset: int = 0,
+                 body_total: Optional[int] = None) -> jax.Array:
     """Inject ``plan``'s faults into THIS worker's 1-D wire buffer
     ``(payload bytes + checksum tail)`` for the traced ``(step, widx)``.
 
     Pure elementwise XOR against constant one-hot byte masks (fixed shape,
     no scatter), so the program is identical whether or not a fault fires.
+
+    With the CHUNKED wire (repro.core.bucket.ChunkedSchedule) each chunk is
+    its own checksummed wire object; the caller then passes this chunk's
+    ``byte_offset`` into the concatenated payload body and the round's
+    ``body_total`` (sum of every chunk's body bytes).  A ``corrupt`` event's
+    ``byte % body_total`` addresses the concatenated body, so it lands in
+    exactly ONE chunk — the same one-flipped-byte-per-round outcome as the
+    monolithic wire; ``drop``/``delay`` break EVERY chunk's tail (the whole
+    payload is late/lost, not one slice of it).  The defaults reproduce the
+    single-wire behaviour byte for byte.
     """
     from .bucket import CHECKSUM_BYTES
 
     step = jnp.asarray(step, jnp.int32)
     widx = jnp.asarray(widx, jnp.int32)
     total = wire.shape[-1]
-    body = total - CHECKSUM_BYTES
+    own_body = total - CHECKSUM_BYTES
+    body = own_body if body_total is None else body_total
     for ev in plan.events:
         mine = widx == jnp.int32(ev.worker)
         if ev.kind == "delay":
@@ -363,7 +376,11 @@ def apply_faults(wire: jax.Array, plan: FaultPlan, step, widx) -> jax.Array:
             hit = mine & (step == jnp.int32(ev.step))
         flip = np.zeros((total,), np.uint8)
         if ev.kind == "corrupt":
-            flip[ev.byte % body] = ev.bits
+            local = ev.byte % body - byte_offset
+            if 0 <= local < own_body:
+                flip[local] = ev.bits
+            else:
+                continue  # this event addresses another chunk's bytes
         else:  # drop / delay: break the checksum tail
             flip[total - 1] = 0xFF
         wire = wire ^ jnp.where(hit, jnp.asarray(flip), jnp.uint8(0))

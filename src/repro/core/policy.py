@@ -182,6 +182,9 @@ class CompressionPolicy:
     vr: bool = False
     vr_p: Optional[float] = None
     participation: Optional[ParticipationSpec] = None
+    chunk_bytes: int = 0
+    topology: str = "flat"
+    node_size: int = 1
 
     def __post_init__(self):
         object.__setattr__(self, "rules", tuple(self.rules))
@@ -197,6 +200,16 @@ class CompressionPolicy:
             self.participation, ParticipationSpec
         ):
             raise TypeError("participation must be a ParticipationSpec")
+        # chunk_bytes / topology / node_size are model-wide like vr: the chunk
+        # schedule and the node grouping act on whole wire rounds, never on
+        # one group.  Per-group validation happens on the rule configs.
+        if self.chunk_bytes < 0:
+            raise ValueError(f"chunk_bytes must be >= 0, got {self.chunk_bytes}")
+        if self.topology not in ("flat", "hierarchical"):
+            raise ValueError(
+                f"topology must be 'flat' or 'hierarchical', got {self.topology!r}")
+        if self.node_size < 1:
+            raise ValueError(f"node_size must be >= 1, got {self.node_size}")
 
     # --------------------------------------------------------------- matching
 
@@ -242,7 +255,8 @@ class CompressionPolicy:
         return cls(rules=(Rule(".*", spec, down=down),), bucketed=cfg.bucketed,
                    h_dtype=cfg.h_dtype, worker_axes=cfg.worker_axes,
                    use_kernel=cfg.use_kernel, vr=cfg.vr, vr_p=cfg.vr_p,
-                   participation=cfg.participation)
+                   participation=cfg.participation, chunk_bytes=cfg.chunk_bytes,
+                   topology=cfg.topology, node_size=cfg.node_size)
 
     def flat_config(self) -> CompressionConfig:
         """The legacy flat config of a uniform policy (inverse of
@@ -271,6 +285,9 @@ class CompressionPolicy:
             down_bucketed=None if d is None or d.layout is None
             else d.layout == "bucketed",
             participation=self.participation,
+            chunk_bytes=self.chunk_bytes,
+            topology=self.topology,
+            node_size=self.node_size,
         )
 
     def representative_config(self) -> CompressionConfig:
@@ -353,7 +370,10 @@ class CompressionPolicy:
                 down = _dc_replace(down, layout="perleaf")
             return _dc_replace(rule, spec=spec, down=down)
 
-        return _dc_replace(self, bucketed=False,
+        # Hierarchical topology rides the fused wire, so the downgrade also
+        # falls back to the flat exchange (resolve_bucketed's warning names
+        # both losses).
+        return _dc_replace(self, bucketed=False, topology="flat",
                            rules=tuple(fix(r) for r in self.rules))
 
     # ---------------------------------------------------------- serialization
@@ -388,6 +408,12 @@ class CompressionPolicy:
             doc["vr_p"] = self.vr_p
         if self.participation is not None:
             doc["participation"] = self.participation.to_json_dict()
+        if self.chunk_bytes:
+            doc["chunk_bytes"] = self.chunk_bytes
+        if self.topology != "flat":
+            doc["topology"] = self.topology
+        if self.node_size != 1:
+            doc["node_size"] = self.node_size
         return doc
 
     def to_json(self) -> str:
@@ -415,7 +441,8 @@ class CompressionPolicy:
                  name=rd.get("name"))
             for rd in doc["rules"])
         kw = dict(defaults)
-        for f in ("bucketed", "use_kernel", "vr", "vr_p"):
+        for f in ("bucketed", "use_kernel", "vr", "vr_p",
+                  "chunk_bytes", "topology", "node_size"):
             if f in doc:
                 kw[f] = doc[f]
         if "worker_axes" in doc:
@@ -436,6 +463,10 @@ class CompressionPolicy:
 @functools.lru_cache(maxsize=None)
 def _rule_config(policy: CompressionPolicy, i: int) -> CompressionConfig:
     spec = policy.rules[i].spec
+    bucketed = policy._spec_bucketed(spec)
+    # Hierarchical exchange rides the fused wire; a per-leaf group in a
+    # hierarchical policy runs the flat exchange (and node_size is inert).
+    topology = policy.topology if bucketed else "flat"
     return CompressionConfig(
         method=spec.method,
         p=_pick(spec, None, "p", _FLAT_DEFAULTS.p),
@@ -445,7 +476,10 @@ def _rule_config(policy: CompressionPolicy, i: int) -> CompressionConfig:
         h_dtype=policy.h_dtype,
         worker_axes=policy.worker_axes,
         use_kernel=policy.use_kernel,
-        bucketed=policy._spec_bucketed(spec),
+        bucketed=bucketed,
+        chunk_bytes=policy.chunk_bytes,
+        topology=topology,
+        node_size=policy.node_size if topology == "hierarchical" else 1,
     )
 
 
@@ -466,6 +500,9 @@ def _rule_down_config(policy: CompressionPolicy, i: int) -> Optional[Compression
         worker_axes=policy.worker_axes,
         use_kernel=policy.use_kernel,
         bucketed=up_bucketed if d.layout is None else d.layout == "bucketed",
+        # The broadcast has no collective: topology never applies downlink,
+        # but the wire chunks the same way the uplink's does.
+        chunk_bytes=policy.chunk_bytes,
     )
 
 
@@ -579,20 +616,32 @@ def grouped_bucket_layout(policy: CompressionPolicy, tree) -> GroupedBucketLayou
                                layouts=layouts)
 
 
-def policy_bits_per_dim(policy: CompressionPolicy, layout) -> float:
+def policy_bits_per_dim(policy: CompressionPolicy, layout, *,
+                        checksum: bool = False) -> float:
     """Size-weighted mean UPLINK wire cost per coordinate across groups — the
     policy-aware analogue of
     :func:`repro.core.compression.payload_bits_per_dim`.  ``layout`` is a
     :class:`~repro.core.bucket.GroupedBucketLayout` (or any params-like
-    pytree, from which one is derived)."""
+    pytree, from which one is derived).
+
+    ``checksum=True`` (faults armed) counts the 8-byte wire tail every
+    bucketed group's fused buffer carries — one tail PER WIRE BUFFER, i.e.
+    per chunk of the group's :class:`~repro.core.bucket.ChunkedSchedule`
+    (:func:`~repro.core.bucket.checksum_tail_bits_per_dim`); per-leaf groups
+    carry none (the fault harness requires the bucketed layout)."""
+    from .bucket import checksum_tail_bits_per_dim
+
     if not isinstance(layout, GroupedBucketLayout):
         layout = grouped_bucket_layout(policy, layout)
     bits = total = 0.0
     for ri, lay in zip(layout.rule_ids, layout.layouts):
-        comp = policy.rule_config(ri).make()
+        cfg = policy.rule_config(ri)
+        comp = cfg.make()
         for s in lay.sizes:
             bits += comp.bits_per_dim(s) * s
             total += s
+        if checksum and cfg.bucketed:
+            bits += checksum_tail_bits_per_dim(lay, cfg.chunk_bytes) * lay.size
     return bits / max(total, 1.0)
 
 

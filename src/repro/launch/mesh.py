@@ -28,8 +28,10 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
 
 
 def data_axes(mesh) -> Tuple[str, ...]:
-    """Axes that shard the batch (everything except 'model')."""
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Axes that shard the batch (everything except 'model').  'node' is the
+    optional intra-/inter-node boundary axis of the hierarchical topology
+    (DESIGN.md §Topology): workers are ('node', 'data'), node-major."""
+    return tuple(a for a in ("pod", "node", "data") if a in mesh.axis_names)
 
 
 def worker_axes_in(mesh, requested: Sequence[str]) -> Tuple[str, ...]:

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import functools
+import warnings
 import math
 import time
 from typing import Any, Dict, NamedTuple, Optional, Tuple
@@ -54,7 +55,7 @@ from .mesh import (
 from .sharding_rules import batch_specs, param_specs
 
 __all__ = ["build_train_step", "train_state_shardings", "init_train_state", "make_optimizer",
-           "resolve_bucketed", "resolve_policy_arg"]
+           "resolve_bucketed", "resolved_layout", "resolve_policy_arg"]
 
 
 def resolve_bucketed(opt: "DianaOptimizer", mesh, waxes) -> "DianaOptimizer":
@@ -84,8 +85,32 @@ def resolve_bucketed(opt: "DianaOptimizer", mesh, waxes) -> "DianaOptimizer":
     from repro.compat import supports_nested_manual
 
     if inner_live and not supports_nested_manual():
+        live = tuple(a for a in mesh.axis_names
+                     if a not in waxes and sizes[a] > 1)
+        warnings.warn(
+            "resolve_bucketed: downgrading the aggregation layout "
+            f"[reason=no-nested-manual inner_axes={live} "
+            "resulting_layout=per-leaf topology=flat]: the flat-buffer round "
+            "cannot lower with live auto inner axes on this toolchain "
+            "(DESIGN.md §6).  Results are bitwise identical; step time and "
+            "collective count are not.",
+            RuntimeWarning, stacklevel=2)
         return opt.replace(policy=pol.force_perleaf())
     return opt
+
+
+def resolved_layout(opt: "DianaOptimizer", mesh, waxes) -> str:
+    """The layout :func:`resolve_bucketed` actually runs on this mesh —
+    ``"bucketed"``, ``"per-leaf"``, or ``"per-leaf (downgraded)"`` when the
+    config asked for bucketed but the toolchain forced the fallback.  Bench
+    rows surface this so a silent-looking downgrade is visible in results."""
+    if not opt.policy.any_bucketed():
+        return "per-leaf"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        resolved = resolve_bucketed(opt, mesh, waxes)
+    return ("bucketed" if resolved.policy.any_bucketed()
+            else "per-leaf (downgraded)")
 
 
 def resolve_policy_arg(cfg, policy) -> CompressionPolicy:
@@ -402,7 +427,11 @@ def build_train_step(cfg, opt: DianaOptimizer, mesh, shape=None, *, window: Opti
                     faults=faults,
                 )
 
-            wkey = jax.random.fold_in(key, widx[0])
+            # Hierarchical topology: every worker of a node runs the SAME
+            # inter-node DIANA round (node-leader memories), so the stream is
+            # folded by NODE index — the core.diana key contract.
+            nsz = comp.node_size if comp.topology == "hierarchical" else 1
+            wkey = jax.random.fold_in(key, widx[0] // nsz)
             # Nested fully-manual aggregation where the toolchain supports
             # it; otherwise keep the inner axes auto (GSPMD constraints) —
             # old XLA RET_CHECKs on completing manualization in a nested map.
@@ -550,6 +579,25 @@ def main(argv=None):
                          "'*' = catch-all), or 'default' for the model's "
                          "curated ModelConfig.comp_policy.  Overrides the "
                          "flat --compression/--comp-k/--down-* surface")
+    ap.add_argument("--chunk-bytes", type=int, default=None,
+                    help="split the bucketed wire into ~this many bytes per "
+                         "chunk (ChunkedSchedule): chunk i+1's all-gather is "
+                         "issued before chunk i's decode so communication "
+                         "overlaps decode work.  0/default keeps the "
+                         "monolithic single-chunk wire; results are bitwise "
+                         "identical either way")
+    ap.add_argument("--topology", default=None,
+                    choices=[None, "flat", "hierarchical"],
+                    help="aggregation topology: 'flat' (default) exchanges "
+                         "compressed payloads between all workers; "
+                         "'hierarchical' runs an uncompressed intra-node "
+                         "mean first, then the compressed DIANA exchange "
+                         "between node leaders (h kept per node, so "
+                         "h == mean(h_i) holds exactly).  Bucketed only")
+    ap.add_argument("--node-size", type=int, default=None,
+                    help="workers per node for --topology hierarchical "
+                         "(must divide the worker count; inferred from a "
+                         "'node' mesh axis when present)")
     ap.add_argument("--per-leaf-agg", action="store_true",
                     help="disable the bucketed (flat-buffer) aggregation and "
                          "compress/gather/decode each parameter leaf separately")
@@ -613,7 +661,10 @@ def main(argv=None):
 
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
-        axes = ("pod", "data", "model")[-len(dims):]
+        # Under --topology hierarchical a 3-dim mesh is (node, data, model):
+        # the leading axis marks the node boundary the two-level round uses.
+        axes = (("node", "data", "model") if args.topology == "hierarchical"
+                and len(dims) == 3 else ("pod", "data", "model"))[-len(dims):]
         mesh = make_mesh(dims, axes)
     else:
         mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
@@ -644,6 +695,26 @@ def main(argv=None):
 
     opt = make_optimizer(cfg, lr=args.lr, inner=args.inner,
                          policy=args.comp_policy, participation=participation)
+    if args.chunk_bytes is not None or args.topology or args.node_size:
+        pol = opt.policy
+        node_size = args.node_size or pol.node_size
+        topology = args.topology or pol.topology
+        waxes_pol = pol.worker_axes
+        if topology == "hierarchical" and "node" in mesh.axis_names:
+            # A 'node' worker mesh axis declares the node boundary: it joins
+            # the worker axes (leading, so resolve_train_mesh flattens
+            # node-major) and the workers of one node are the contiguous
+            # non-'node' remainder.
+            if "node" not in waxes_pol:
+                waxes_pol = ("node",) + tuple(waxes_pol)
+            if args.node_size is None:
+                node_size = (worker_count(mesh, waxes_pol)
+                             // mesh.shape["node"])
+        opt = opt.replace(policy=pol.replace(
+            chunk_bytes=pol.chunk_bytes if args.chunk_bytes is None
+            else args.chunk_bytes,
+            topology=topology, node_size=node_size,
+            worker_axes=waxes_pol))
     key = jax.random.PRNGKey(0)
     params, opt_state, _ = init_train_state(cfg, opt, mesh, key)
     step_fn = build_train_step(cfg, opt, mesh, shape, faults=faults)

@@ -24,14 +24,17 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["shard", "shard_spec", "sharding_policy", "GSPMDPolicy", "current_policy", "LOGICAL_RULES"]
 
-# Logical axis -> mesh axes. 'batch' spans both data axes; tensors sharded over
-# 'model' use the logical name 'model'; 'seq' is used by long-context decode
-# caches (sequence parallelism); 'expert' by expert-parallel MoE.
+# Logical axis -> mesh axes. 'batch' spans the data axes — including the
+# optional 'node' axis of the hierarchical aggregation topology (a worker
+# axis like 'pod'/'data', marking the intra-node boundary; DESIGN.md
+# §Topology); tensors sharded over 'model' use the logical name 'model';
+# 'seq' is used by long-context decode caches (sequence parallelism);
+# 'expert' by expert-parallel MoE.
 LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
-    "batch": ("pod", "data"),
+    "batch": ("pod", "node", "data"),
     "model": ("model",),
     "expert": ("model",),
-    "seq": ("pod", "data"),
+    "seq": ("pod", "node", "data"),
     "fsdp": ("data",),
 }
 

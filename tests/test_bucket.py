@@ -470,3 +470,54 @@ def test_randk_bucketed_not_slower_than_perleaf_reference():
         if ratios[-1] >= 1.0:
             break
     assert max(ratios) >= 1.0, f"bucketed rand-k slower than per-leaf: {ratios}"
+
+
+def test_diana_bucketed_not_slower_than_perleaf_reference():
+    """The ternary (diana/qsgd) analogue of the rand-k regression above
+    (BENCH_step_time.json speedup 0.886 at the small size): the per-block
+    sign-draw is the per-leaf PRNG cost both layouts re-pay, and the
+    one-call-per-leaf `jax.random.bits` dispatch dwarfed the bucketed
+    layout's structural win.  Batching the equal-row-count draws through one
+    vmapped `bits` call (bitwise identical: threefry is counter-mode per
+    key) shrinks that shared cost, so bucketed must now be at least as fast
+    on the small bench model.
+
+    Same discipline as above: interleaved medians, best of three."""
+    import time
+    from dataclasses import replace
+
+    spec = [("emb", (64, 32))] + [
+        (f"l{i}.{nm}", shp)
+        for i in range(8)
+        for nm, shp in [("wq", (32, 32)), ("wo", (32, 32)),
+                        ("mlp", (32, 64)), ("b", (64,))]
+    ]
+    params = {name: jnp.zeros(shape, jnp.float32) for name, shape in spec}
+    n = 4
+    grads = _grads(params, n)
+    cfg_pl = CompressionConfig(method="diana", block_size=256, p=math.inf)
+    cfg_bk = replace(cfg_pl, bucketed=True)
+
+    steps = {}
+    for tag, cfg in (("pl", cfg_pl), ("bk", cfg_bk)):
+        state = reference_init(params, cfg, n)
+        step = jax.jit(lambda g, s, k, cfg=cfg: reference_step(g, s, k, cfg))
+        jax.block_until_ready(step(grads, state, KEY))  # compile + warm
+        steps[tag] = (step, state)
+
+    def _ratio(reps=15):
+        ts = {"pl": [], "bk": []}
+        for _ in range(reps):
+            for tag, (step, state) in steps.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(step(grads, state, KEY))
+                ts[tag].append(time.perf_counter() - t0)
+        med = {k: sorted(v)[len(v) // 2] for k, v in ts.items()}
+        return med["pl"] / med["bk"]
+
+    ratios = []
+    for _ in range(3):
+        ratios.append(_ratio())
+        if ratios[-1] >= 1.0:
+            break
+    assert max(ratios) >= 1.0, f"bucketed diana slower than per-leaf: {ratios}"

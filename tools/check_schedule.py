@@ -1,0 +1,262 @@
+#!/usr/bin/env python
+"""Chunk-schedule linter: every registry operator's chunked wire route is
+alive, oracle-checked, and the pipelined round really overlaps.
+
+Run as a CI step (and from ``tests/test_schedule.py``, mirroring
+``tools/check_kernels.py``) so the chunked-wire contract of DESIGN.md
+§Topology can never silently rot:
+
+1. **Route**: every canonical operator (and every alias) resolves
+   ``compress_bucketed_keys`` — the chunk-sliced key entry point the
+   :class:`~repro.core.bucket.ChunkedSchedule` round drives — and a
+   multi-chunk compress -> wire round trip -> decode actually runs.
+
+2. **Oracle**: the concatenated per-chunk decode is BITWISE the monolithic
+   decode of the same buffer under the same key (the bitwise-equality
+   linchpin: chunk keys are slices of the monolithic per-leaf schedule,
+   never re-splits).
+
+3. **Overlap**: counted on the traced jaxpr of a >= 3-chunk round: chunk 1's
+   all-gather eqn is ISSUED before the first eqn that combines chunk 0's
+   gathered payload with the server memory (chunk 0's ``decode_sum_apply``)
+   — the async-collective double-buffer contract.  Exposed as
+   :func:`overlap_report` for the CI smoke step and the test suite.
+
+Exit code 0 = clean; 1 = any finding, each printed as ``operator: message``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+# method -> config kwargs that make it constructible (sparse operators need k)
+METHOD_KW = {"randk": dict(k=4), "topk_ef": dict(k=4),
+             "rand-k": dict(k=4), "top-k-ef": dict(k=4)}
+
+# Leaves sized so chunk_bytes=300 packs them into >= 3 whole-leaf chunks and
+# no single leaf's flat size collides with the padded buffer size (the
+# overlap check identifies h_server by its (Dp,) f32 aval).
+_PARAMS_SPEC = {"w1": (20, 13), "b1": (160,), "w2": (9, 31), "b2": (70,)}
+CHUNK_BYTES = 300
+
+
+def _params():
+    import jax.numpy as jnp
+
+    return {k: jnp.zeros(s, jnp.float32) for k, s in _PARAMS_SPEC.items()}
+
+
+def _grid_tree(key):
+    """1/64-grid values: partial sums exact in f32, so bitwise comparisons
+    are meaningful for every operator (tests/test_convergence_laws.py)."""
+    import jax
+    import jax.numpy as jnp
+
+    return {
+        k: jnp.round(jax.random.normal(jax.random.fold_in(key, i), s) * 64) / 64
+        for i, (k, s) in enumerate(_PARAMS_SPEC.items())
+    }
+
+
+def chunk_route_errors(method: str) -> list:
+    """The chunked route is reachable and its decode matches the monolithic
+    oracle bitwise (wire round trip included)."""
+    import jax
+    import numpy as np
+
+    from repro.core.bucket import (ChunkedSchedule, bucketed_compressor,
+                                   wire_roundtrip)
+    from repro.core.diana import _chunk_decode_own, _chunk_payloads, bucket_layout
+    from repro.core.policy import CompressionConfig
+
+    try:
+        cfg = CompressionConfig(method=method, bucketed=True,
+                                **METHOD_KW.get(method, {}))
+    except Exception as e:
+        return [f"{method}: bucketed config does not construct "
+                f"({type(e).__name__}: {e})"]
+
+    comp = cfg.make()
+    if not callable(getattr(comp, "compress_bucketed_keys", None)):
+        return [f"{method}: no compress_bucketed_keys — the chunked route "
+                f"(ChunkedSchedule key slicing) is unreachable"]
+
+    lay = bucket_layout(cfg, _params())
+    sched = ChunkedSchedule.for_layout(lay, CHUNK_BYTES)
+    errors = []
+    if sched.n_chunks < 3:
+        errors.append(f"{method}: lint fixture packs into only "
+                      f"{sched.n_chunks} chunk(s) — widen _PARAMS_SPEC")
+
+    key = jax.random.PRNGKey(3)
+    delta = lay.flatten(_grid_tree(key))
+    bcomp = bucketed_compressor(cfg, lay)
+    try:
+        mono = bcomp.decode(bcomp.compress(delta, key), lay.padded_size)
+        pays = [wire_roundtrip(p)
+                for p in _chunk_payloads(cfg, sched, delta, key)]
+        chunked = _chunk_decode_own(cfg, sched, pays)
+    except Exception as e:
+        return errors + [f"{method}: chunked round trip does not run "
+                         f"({type(e).__name__}: {e})"]
+    if not np.array_equal(np.asarray(chunked), np.asarray(mono)):
+        err = float(np.abs(np.asarray(chunked) - np.asarray(mono)).max())
+        errors.append(f"{method}: chunked decode != monolithic oracle "
+                      f"(max |err| = {err:g}) — chunk keys must be slices of "
+                      f"the monolithic per-leaf schedule")
+    return errors
+
+
+def _iter_jaxprs(jaxpr):
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for x in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None:
+                    yield from _iter_jaxprs(inner)
+                elif hasattr(x, "eqns"):
+                    yield from _iter_jaxprs(x)
+
+
+def overlap_report(method: str = "diana", chunk_bytes: int = CHUNK_BYTES):
+    """(errors, stats) for the double-buffer contract, counted on the jaxpr.
+
+    Finds the jaxpr level holding the per-chunk ``all_gather`` eqns, then the
+    first eqn transitively depending on BOTH chunk 0's gathered payload AND
+    the ``h_server`` input — the head of chunk 0's ``decode_sum_apply``.  The
+    pipelined trace issues chunk 1's gather BEFORE that eqn; a sequential
+    gather->decode->gather trace puts it after, which is the finding.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import (CompressionConfig, DianaState, aggregate_shardmap,
+                            init_state)
+    from repro.core.bucket import ChunkedSchedule
+    from repro.core.diana import bucket_layout
+    from repro.launch.mesh import make_mesh
+
+    cfg = CompressionConfig(method=method, bucketed=True,
+                            chunk_bytes=chunk_bytes,
+                            **METHOD_KW.get(method, {}))
+    params = _params()
+    lay = bucket_layout(cfg, params)
+    dp = lay.padded_size
+    n_chunks = ChunkedSchedule.for_layout(lay, chunk_bytes).n_chunks
+    if n_chunks < 3:
+        return ([f"{method}: overlap fixture packs into only {n_chunks} "
+                 f"chunk(s)"], {})
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    n = 1
+    state = init_state(params, cfg, n)
+    grads = {k: jnp.zeros((n,) + v.shape, jnp.float32)
+             for k, v in params.items()}
+
+    def body(gs, h_w, h_s, k):
+        g_local = jax.tree_util.tree_map(lambda g: g[0], gs)
+        ghat, ns = aggregate_shardmap(g_local, DianaState(h_w, h_s), k, cfg,
+                                      axis_names=("data",), n_workers=n)
+        return ghat, ns.h_worker, ns.h_server
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree_util.tree_map(lambda _: P("data"), grads),
+                  P("data"), P(), P()),
+        out_specs=(jax.tree_util.tree_map(lambda _: P(), params),
+                   P("data"), P()),
+        axis_names={"data"}, check_vma=False)
+    jaxpr = jax.make_jaxpr(f)(grads, state.h_worker, state.h_server,
+                              jax.random.PRNGKey(0))
+
+    target = None
+    for j in _iter_jaxprs(jaxpr.jaxpr):
+        gi = [i for i, e in enumerate(j.eqns)
+              if e.primitive.name == "all_gather"]
+        if len(gi) >= 2:
+            target = (j, gi)
+            break
+    if target is None:
+        return ([f"{method}: no jaxpr level with >= 2 all_gather eqns "
+                 f"({n_chunks} chunks expected one gather each)"], {})
+    j, gi = target
+
+    errors = []
+    if len(gi) != n_chunks:
+        errors.append(f"{method}: {len(gi)} all_gather eqns for {n_chunks} "
+                      f"chunks — the wire is not one collective per chunk")
+
+    # h_server is the unique (Dp,) f32 input at this jaxpr level.
+    h_vars = [v for v in list(j.invars) + list(j.constvars)
+              if getattr(v.aval, "shape", None) == (dp,)
+              and getattr(v.aval, "dtype", None) == jnp.float32]
+    if len(h_vars) != 1:
+        return (errors + [f"{method}: cannot identify h_server input "
+                          f"({len(h_vars)} candidates of shape ({dp},))"], {})
+
+    def downstream(seed_vars):
+        live, idxs = set(seed_vars), set()
+        for i, e in enumerate(j.eqns):
+            if any(not hasattr(v, "val") and v in live for v in e.invars):
+                idxs.add(i)
+                live.update(e.outvars)
+        return idxs
+
+    joint = sorted(downstream(j.eqns[gi[0]].outvars) & downstream(h_vars))
+    stats = {"n_chunks": n_chunks, "gather_eqns": gi,
+             "first_decode_apply_eqn": joint[0] if joint else None}
+    if not joint:
+        return (errors + [f"{method}: no eqn combines chunk 0's gather with "
+                          f"h_server — decode_sum_apply not found"], stats)
+    stats["gathers_in_flight"] = sum(1 for g in gi[1:] if g < joint[0])
+    if stats["gathers_in_flight"] < 1:
+        errors.append(
+            f"{method}: chunk 1's all_gather (eqn {gi[1]}) is issued AFTER "
+            f"chunk 0's decode_sum_apply begins (eqn {joint[0]}) — the "
+            f"chunked wire lost its double-buffer pipeline")
+    return errors, stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the jaxpr overlap check (no tracing, faster)")
+    args = ap.parse_args(argv)
+
+    from repro.core.compressors.registry import available_methods
+
+    errors = []
+    for method in available_methods():
+        errors += chunk_route_errors(method)
+    stats = {}
+    if not args.no_trace:
+        errs, stats = overlap_report()
+        errors += errs
+
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"check_schedule: {len(errors)} finding(s)", file=sys.stderr)
+        return 1
+    msg = (f"check_schedule: all {len(available_methods())} operators keep "
+           f"the chunked route reachable and bitwise on the monolithic "
+           f"oracle")
+    if stats:
+        msg += (f"; overlap: {stats['gathers_in_flight']} collective(s) in "
+                f"flight when chunk 0's decode_sum_apply begins "
+                f"(gathers at eqns {stats['gather_eqns']}, decode head at "
+                f"eqn {stats['first_decode_apply_eqn']})")
+    print(msg)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
